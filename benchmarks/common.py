@@ -1,0 +1,150 @@
+"""Shared harness for the paper-table benchmarks (scaled reproduction).
+
+Protocol (EXPERIMENTS.md §Repro): the CIFAR/ResNet-18×4000-round experiments
+of the paper are reproduced at container scale on a synthetic Gaussian
+mixture with controlled Bayes error (separation 0.9 / noise 2.0 ≈ 60–80%
+achievable accuracy) and an MLP with GroupNorm-free layers.  Scaled
+settings mirror §6.1:
+
+  Setting I  : 100 clients, 10% participation (bernoulli), 100 pts/client
+  Setting II : 500 clients,  2% participation (bernoulli),  50 pts/client
+
+Metrics per run:
+  acc_mid      — accuracy at the 40%-budget round (convergence speed)
+  acc_final    — mean accuracy over the last 20% of rounds (quality)
+  acc_std      — std over those evals (stability / oscillation — Fig. 2-3's
+                 visual claim, quantified)
+
+Per-algorithm server LRs follow appendix C.2 (η_g=1 averaging for all but
+FedAdam, which uses a small absolute server LR).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine, make_eval_fn
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+# paper appendix C.2: per-algorithm hyperparameters
+ETA_G = {"fedadam": 0.03}
+ALPHA = {"fedadam": 0.1}
+FEDDYN_ALPHA = 0.01
+
+N_CLASSES = 20
+DIM = 32
+SEP, NOISE = 0.9, 2.0
+
+
+@dataclass
+class Setting:
+    name: str
+    num_clients: int
+    cohort_size: int
+    pts_per_client: int
+
+
+# the paper splits ONE fixed corpus (CIFAR 50k) over 100 or 500 clients —
+# total data must match across settings or the comparison confounds
+# participation with dataset size (25 000 points here → 250/50 per client)
+SETTING_I = Setting("I (100 clients, 10%)", 100, 10, 250)
+SETTING_II = Setting("II (500 clients, 2%)", 500, 10, 50)
+
+
+def make_task(setting: Setting, seed: int = 0):
+    n_train = setting.num_clients * setting.pts_per_client
+    x_tr, y_tr, x_te, y_te = make_synthetic_classification(
+        n_classes=N_CLASSES, dim=DIM, n_train=n_train, n_test=4000,
+        noise=NOISE, separation=SEP, seed=seed,
+    )
+    model = mlp_classifier((DIM, 128, 64, N_CLASSES))
+    return x_tr, y_tr, x_te, y_te, model
+
+
+def run_one(
+    algo: str,
+    setting: Setting,
+    dirichlet: float,
+    rounds: int,
+    seed: int = 0,
+    alpha: Optional[float] = None,
+    local_steps: int = 20,
+    eta_l: float = 0.05,
+    track_curve: bool = False,
+) -> Dict:
+    x_tr, y_tr, x_te, y_te, model = make_task(setting, seed=seed)
+    loss_fn = classification_loss(model.apply)
+    a = alpha if alpha is not None else ALPHA.get(algo, 0.05)
+    cfg = FedConfig(
+        algo=algo, num_clients=setting.num_clients, cohort_size=setting.cohort_size,
+        local_steps=local_steps, alpha=a, eta_l=eta_l,
+        eta_g=ETA_G.get(algo, 1.0), participation="bernoulli",
+        weight_decay=1e-3, eta_l_decay=0.998, feddyn_alpha=FEDDYN_ALPHA,
+        rounds=rounds, seed=seed,
+    )
+    data = FederatedData(x_tr, y_tr, cfg.num_clients, dirichlet_alpha=dirichlet, seed=seed)
+    eng = FederatedEngine(cfg, loss_fn, batch_size=20)
+    state = eng.init(model.init(jax.random.PRNGKey(seed)), jax.random.PRNGKey(seed + 1))
+    evaluate = make_eval_fn(model.apply)
+    x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
+
+    mid_round = int(rounds * 0.4)
+    tail_start = int(rounds * 0.8)
+    acc_mid, tail, curve = None, [], []
+    t0 = time.time()
+    for r in range(rounds):
+        state, m = eng.run_round(state, data)
+        if r == mid_round:
+            acc_mid = evaluate(state.params, x_te_j, y_te_j)
+        if r >= tail_start and (r % 5 == 0 or r == rounds - 1):
+            tail.append(evaluate(state.params, x_te_j, y_te_j))
+        if track_curve and r % 5 == 0:
+            curve.append((r, evaluate(state.params, x_te_j, y_te_j)))
+    out = {
+        "algo": algo, "setting": setting.name, "dirichlet": dirichlet,
+        "alpha": a, "rounds": rounds, "seed": seed,
+        "acc_mid": round(float(acc_mid), 4),
+        "acc_final": round(float(np.mean(tail)), 4),
+        "acc_std": round(float(np.std(tail)), 4),
+        "train_loss": round(float(m.loss), 4),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    if track_curve:
+        out["curve"] = curve
+    return out
+
+
+def aggregate_seeds(rows: List[Dict]) -> Dict:
+    """Mean over seeds of one (algo, setting, split) cell."""
+    out = dict(rows[0])
+    for k in ("acc_mid", "acc_final", "acc_std"):
+        out[k] = round(float(np.mean([r[k] for r in rows])), 4)
+    out["n_seeds"] = len(rows)
+    return out
+
+
+def save_artifact(name: str, obj) -> Path:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    p = ARTIFACTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1))
+    return p
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]):
+    print(f"\n### {title}")
+    widths = {c: max(len(c), max((len(str(r.get(c, ''))) for r in rows), default=0)) for c in cols}
+    print("  " + "  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  " + "  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))

@@ -1,0 +1,145 @@
+"""Render EXPERIMENTS.md result tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--write]
+
+Prints (or splices into EXPERIMENTS.md at the <!-- RESULTS:* --> markers)
+markdown tables for: the dry-run pair matrix, the roofline table, and the
+federated benchmark tables if their artifacts exist.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+from benchmarks.roofline import load_rows, model_flops_per_device
+from repro.configs.base import ARCH_IDS, SHAPES
+from repro.launch.mesh import PEAK_FLOPS_BF16
+
+HERE = Path(__file__).resolve().parent
+DRYRUN = HERE / "artifacts" / "dryrun"
+ART = HERE / "artifacts"
+EXP = HERE.parent / "EXPERIMENTS.md"
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "?"
+    for u in ("B", "KiB", "MiB", "GiB"):
+        if b < 1024:
+            return f"{b:.1f}{u}"
+        b /= 1024
+    return f"{b:.2f}TiB"
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | kind | compile_s | temp bytes/chip | FLOPs/chip | coll bytes/chip | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    from repro.launch.dryrun import LONG_OK
+
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | — | — | — | SKIP (full attention; DESIGN §6) |"
+                )
+                continue
+            for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+                p = DRYRUN / f"{arch}_{shape}_{mesh}.json"
+                if not p.exists():
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | — | — | MISSING |")
+                    continue
+                d = json.loads(p.read_text())
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {d['kind']} | {d['compile_seconds']} | "
+                    f"{_fmt_bytes(d['memory']['temp_bytes'])} | {d['hlo_flops_per_device']:.2e} | "
+                    f"{d['collective_bytes_per_device']:.2e} | PASS |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = load_rows("single_pod_16x16")
+    lines = [
+        "| arch | shape | compute_ms | memory_ms | collective_ms | bottleneck | MODEL_FLOPS/HLO | one-line fix |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    fixes = {
+        ("memory", "train"): "bf16-ize / fuse the dominant elementwise chains; bigger microbatches amortize FSDP gathers",
+        ("memory", "decode"): "KV-cache dtype + layout (ring buffer for windowed layers); fuse cache update",
+        ("memory", "prefill"): "flash-attention kernel removes score materialization",
+        ("collective", "train"): "sequence-sharded residuals: all-reduce → reduce-scatter+all-gather (½ bytes)",
+        ("collective", "decode"): "replicate small tensors; batch the per-layer psums",
+        ("collective", "prefill"): "overlap TP collectives with the next layer's matmul",
+        ("compute", "train"): "already MXU-bound — raise per-chip batch",
+        ("compute", "decode"): "decode is latency-bound; batch more sequences",
+        ("compute", "prefill"): "already MXU-bound",
+    }
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        fix = fixes.get((r["bottleneck"], r["kind"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | {r['memory_ms']} | "
+            f"{r['collective_ms']} | **{r['bottleneck']}** | {r['model_flops_ratio']} | {fix} |"
+        )
+    return "\n".join(lines)
+
+
+def fed_tables() -> dict:
+    out = {}
+    t1 = ART / "table1_main_comparison.json"
+    if t1.exists():
+        rows = json.loads(t1.read_text())
+        lines = ["| setting | split | algo | acc@40% | acc final | std |", "|---|---|---|---|---|---|"]
+        for r in rows:
+            lines.append(
+                f"| {r['setting']} | {r['split']} | {r['algo']} | {r['acc_mid']:.4f} | "
+                f"{r['acc_final']:.4f} | {r['acc_std']:.4f} |"
+            )
+        out["TABLE1"] = "\n".join(lines)
+    t3 = ART / "table3_alpha_sensitivity.json"
+    if t3.exists():
+        rows = json.loads(t3.read_text())
+        lines = ["| α | acc@40% | acc final | std |", "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['alpha']} | {r['acc_mid']:.4f} | {r['acc_final']:.4f} | {r['acc_std']:.4f} |")
+        out["TABLE3"] = "\n".join(lines)
+    pr = ART / "participation_robustness.json"
+    if pr.exists():
+        rows = json.loads(pr.read_text())
+        lines = ["| participation | algo | acc final | std |", "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['participation']} | {r['algo']} | {r['acc_final']:.4f} | {r['acc_std']:.4f} |")
+        out["TABLE1"] = out.get("TABLE1", "") + "\n\nParticipation sweep (500 clients, Dir-0.3):\n\n" + "\n".join(lines)
+    return out
+
+
+def splice(marker: str, content: str, text: str) -> str:
+    tag = f"<!-- RESULTS:{marker} -->"
+    if tag not in text:
+        return text
+    return text.replace(tag, tag + "\n\n" + content + "\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true", help="splice into EXPERIMENTS.md")
+    args = ap.parse_args()
+    blocks = {"DRYRUN": dryrun_table(), "ROOFLINE": roofline_table()}
+    blocks.update(fed_tables())
+    if args.write:
+        text = EXP.read_text()
+        for k, v in blocks.items():
+            text = splice(k, v, text)
+        EXP.write_text(text)
+        print(f"spliced {sorted(blocks)} into {EXP}")
+    else:
+        for k, v in blocks.items():
+            print(f"\n===== {k} =====\n{v}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,92 @@
+"""Roofline table builder — reads the dry-run artifacts (deliverable (g)).
+
+For every (arch × shape × mesh) JSON under benchmarks/artifacts/dryrun/:
+  compute_s    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory_s     = HLO_bytes / HBM_bw               (per chip)
+  collective_s = collective_bytes / ICI link bw   (per chip)
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per chip, and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+
+Decode steps process D=B tokens (one per sequence); train/prefill process
+D=B·S tokens.  Backward+forward ⇒ the 6·N·D estimate for training; forward
+only ⇒ 2·N·D for prefill/decode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ARTIFACT_DIR = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per_param = 6  # fwd 2 + bwd 4
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        per_param = 2
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        per_param = 2
+    return per_param * n_active * tokens / chips
+
+
+def load_rows(mesh_filter: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for p in sorted(ARTIFACT_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if any(f"{k}-" in p.stem for k in (
+                "microbatches", "remat", "seq_shard", "serve_params",
+                "moment_dtype", "grad_accum", "use_kernels")):
+            continue  # hillclimb variants: §Perf reads them explicitly
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        terms = d["roofline"]
+        mf = model_flops_per_device(d["arch"], d["shape"], d["chips"])
+        useful = mf / d["hlo_flops_per_device"] if d["hlo_flops_per_device"] else 0.0
+        dominant = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+        )
+        bound = terms[dominant]
+        total = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "kind": d["kind"],
+            "compute_ms": round(terms["compute_s"] * 1e3, 2),
+            "memory_ms": round(terms["memory_s"] * 1e3, 2),
+            "collective_ms": round(terms["collective_s"] * 1e3, 2),
+            "bottleneck": dominant.replace("_s", ""),
+            "model_flops_ratio": round(useful, 3),
+            "bound_ms": round(total * 1e3, 2),
+        })
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh)
+    if not rows:
+        print("no dry-run artifacts found — run `python -m repro.launch.dryrun --all` first")
+        return 1
+    cols = ["arch", "shape", "kind", "compute_ms", "memory_ms", "collective_ms",
+            "bottleneck", "model_flops_ratio"]
+    w = {c: max(len(c), max(len(str(r[c])) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(w[c]) for c in cols))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print("  ".join(str(r[c]).ljust(w[c]) for c in cols))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

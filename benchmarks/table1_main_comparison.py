@@ -1,0 +1,69 @@
+"""Tables 1 & 2 (scaled): all algorithms × settings I/II × IID/Dirichlet.
+
+Paper claims under test (EXPERIMENTS.md §Repro maps each to a column):
+  C1  FedCM converges fastest (acc_mid highest)
+  C2  FedCM is robust to the participation drop I→II (smallest Δ)
+  C3  FedCM's IID↔non-IID gap is small
+  C4  FedCM's convergence is the most stable (lowest acc_std)
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    SETTING_I,
+    SETTING_II,
+    aggregate_seeds,
+    print_table,
+    run_one,
+    save_artifact,
+)
+
+ALGOS = ["fedcm", "fedavg", "fedadam", "scaffold", "feddyn", "mimelite"]
+
+
+def main(rounds: int = 150, seeds: int = 2, algos=None) -> list:
+    algos = algos or ALGOS
+    rows = []
+    for setting in (SETTING_I, SETTING_II):
+        for dirichlet in (float("inf"), 0.3):
+            split = "IID" if dirichlet == float("inf") else f"Dir-{dirichlet}"
+            for algo in algos:
+                per_seed = [
+                    run_one(algo, setting, dirichlet, rounds, seed=s)
+                    for s in range(seeds)
+                ]
+                row = aggregate_seeds(per_seed)
+                row["split"] = split
+                rows.append(row)
+                print(f"  {setting.name:24s} {split:8s} {algo:9s} "
+                      f"mid={row['acc_mid']:.4f} final={row['acc_final']:.4f} "
+                      f"±{row['acc_std']:.4f}")
+    save_artifact("table1_main_comparison", rows)
+    print_table(
+        "Table 1/2 (scaled): test accuracy",
+        rows, ["setting", "split", "algo", "acc_mid", "acc_final", "acc_std"],
+    )
+    # claim deltas
+    def cell(setting, split, algo, key):
+        for r in rows:
+            if r["setting"] == setting.name and r["split"] == split and r["algo"] == algo:
+                return r[key]
+        return None
+
+    print("\n### participation-drop I→II (final acc, Dir split) — paper claim C2")
+    for algo in algos:
+        a1 = cell(SETTING_I, "Dir-0.3", algo, "acc_final")
+        a2 = cell(SETTING_II, "Dir-0.3", algo, "acc_final")
+        if a1 and a2:
+            print(f"  {algo:9s}  I={a1:.4f}  II={a2:.4f}  drop={a1 - a2:+.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--algos", nargs="*", default=None)
+    a = ap.parse_args()
+    main(a.rounds, a.seeds, a.algos)

@@ -1,0 +1,42 @@
+"""Quickstart: FedCM in ~40 lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains a small MLP federated across 50 heterogeneous clients with FedCM,
+prints round metrics, and contrasts against FedAvg — the paper's headline
+comparison at toy scale.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine, make_eval_fn
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+# 1. a non-IID federated dataset (Dirichlet label skew, paper §C.1)
+x_tr, y_tr, x_te, y_te = make_synthetic_classification(
+    n_classes=10, dim=32, n_train=5000, n_test=1000, separation=0.9, noise=2.0
+)
+data = FederatedData(x_tr, y_tr, num_clients=50, dirichlet_alpha=0.3)
+
+# 2. a model + loss
+model = mlp_classifier((32, 64, 10))
+loss_fn = classification_loss(model.apply)
+evaluate = make_eval_fn(model.apply)
+
+# 3. run FedCM vs FedAvg (α=1 ≡ FedAvg; α=0.05 is the paper's sweet spot)
+for algo, alpha in [("fedcm", 0.05), ("fedavg", 1.0)]:
+    cfg = FedConfig(algo=algo, num_clients=50, cohort_size=5, local_steps=10,
+                    alpha=alpha, eta_l=0.05, eta_g=1.0, rounds=60,
+                    participation="bernoulli")
+    eng = FederatedEngine(cfg, loss_fn, batch_size=20)
+    state = eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    for r in range(cfg.rounds):
+        state, m = eng.run_round(state, data)
+        if (r + 1) % 20 == 0:
+            acc = evaluate(state.params, jnp.asarray(x_te), jnp.asarray(y_te))
+            print(f"{algo:7s} round {r+1:3d}  loss={float(m.loss):.3f}  "
+                  f"test_acc={acc:.3f}  active={int(m.n_active)}  "
+                  f"downlink={float(m.bytes_down)/2**20:.2f} MiB")
+    print()

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill → decode over any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_model.py --arch mamba2-1.3b
+    PYTHONPATH=src python examples/serve_model.py --arch gemma3-12b --gen 48
+
+Uses the reduced config on CPU; the identical code path serves the full
+config on a TPU mesh (sharded KV cache per sharding/rules.py).
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + sys.argv[1:]
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

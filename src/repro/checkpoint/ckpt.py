@@ -1,0 +1,97 @@
+"""msgpack-based pytree checkpointing (orbax is not available offline).
+
+Layout: ``<dir>/step_<N>.msgpack`` holding a flat map
+``{path: {dtype, shape, data}}`` plus a ``__meta__`` entry.  Sharded arrays
+are gathered to host before writing (fine at the scales this container
+trains; the production path would write per-shard files — noted in
+DESIGN.md).  bfloat16 round-trips via a uint16 view.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_BF16 = "bfloat16"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload: Dict[str, Any] = {}
+    for path, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(leaf.dtype) if hasattr(leaf, "dtype") else str(arr.dtype)
+        if dtype == _BF16:
+            data = np.asarray(jax.device_get(leaf)).view(np.uint16).tobytes()
+        else:
+            data = arr.tobytes()
+        payload[_path_str(path)] = {
+            "dtype": dtype,
+            "shape": list(arr.shape),
+            "data": data,
+        }
+    payload["__meta__"] = dict(meta or {}, step=step)
+    fname = os.path.join(directory, f"step_{step}.msgpack")
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, fname)  # atomic publish
+    return fname
+
+
+def load_checkpoint(directory: str, step: Optional[int], like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    fname = os.path.join(directory, f"step_{step}.msgpack")
+    with open(fname, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = _path_str(path)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        entry = payload[key]
+        if entry["dtype"] == _BF16:
+            arr = np.frombuffer(entry["data"], dtype=np.uint16).reshape(entry["shape"])
+            leaves.append(jnp.asarray(arr).view(jnp.bfloat16))
+        else:
+            arr = np.frombuffer(entry["data"], dtype=np.dtype(entry["dtype"]))
+            leaves.append(jnp.asarray(arr.reshape(entry["shape"])))
+    tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+    return tree, meta
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.msgpack", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

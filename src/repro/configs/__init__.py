@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    FedConfig,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    get_config,
+    list_configs,
+    reduced,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "FedConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_config",
+    "list_configs",
+    "reduced",
+]

@@ -1,0 +1,328 @@
+"""Config system: model / federated / shape configs + registry.
+
+Every assigned architecture lives in ``src/repro/configs/<id>.py`` exposing a
+module-level ``CONFIG: ModelConfig``.  ``get_config(name)`` resolves it;
+``reduced(cfg)`` produces the CPU smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default: d_model // n_heads
+
+    # --- attention variants ---
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # window for "local" attention layers
+    # (n_local, n_global) per repeating period; None = all-global.
+    local_global_pattern: Optional[Tuple[int, int]] = None
+
+    # --- mlp ---
+    mlp_type: str = "gated_silu"  # gated_silu | gelu
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1  # a layer is MoE iff (layer_idx % moe_every == moe_every-1)
+    shared_expert: bool = False
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+
+    # --- hybrid (zamba2-style): shared attention block every N layers ---
+    attn_every: int = 0  # 0 = never; >0: layer i is (shared) attention iff i % attn_every == attn_every-1
+
+    # --- encoder-decoder ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+
+    # --- modality frontend (stubbed per assignment) ---
+    input_mode: str = "tokens"  # tokens | embeddings
+
+    # --- numerics ---
+    dtype: str = "float32"  # activation dtype ("bfloat16" on TPU target)
+    param_dtype: str = "float32"
+
+    # --- provenance ---
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding table rows — the assigned vocab rounded up
+        to 256 so the vocab dim shards over any production mesh axis (an
+        unshardable 256206-row unembed costs a 31 GiB/chip logits tensor).
+        Token ids stay < vocab_size; the pad rows are dead weight."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return layer_idx % self.moe_every == self.moe_every - 1
+
+    def is_attn_layer(self, layer_idx: int) -> bool:
+        """hybrid family: which decoder layers are (shared) attention blocks."""
+        if self.family != "hybrid":
+            return True
+        return self.attn_every > 0 and layer_idx % self.attn_every == self.attn_every - 1
+
+    def is_global_attn_layer(self, layer_idx: int) -> bool:
+        """local:global pattern — global layers attend fully."""
+        if self.local_global_pattern is None:
+            return self.sliding_window is None
+        n_local, n_global = self.local_global_pattern
+        period = n_local + n_global
+        return layer_idx % period >= n_local
+
+    # ------------------------------------------------------------------
+    # parameter count estimate (for MODEL_FLOPS = 6*N*D in the roofline)
+    # ------------------------------------------------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        D = self.d_model
+        hd = self.resolved_head_dim if self.n_heads > 0 else 0
+        n = 0
+        # embeddings
+        emb = self.vocab_size * D
+        n += emb if self.tie_embeddings else 2 * emb
+
+        def attn_params() -> int:
+            q = D * self.n_heads * hd
+            kv = 2 * D * self.n_kv_heads * hd
+            o = self.n_heads * hd * D
+            return q + kv + o
+
+        def mlp_params(d_ff: int) -> int:
+            if self.mlp_type == "gated_silu":
+                return 3 * D * d_ff
+            return 2 * D * d_ff
+
+        def mamba_params() -> int:
+            d_inner = self.ssm_expand * D
+            nheads = self.ssm_heads
+            # in_proj -> [z, x, B, C, dt]
+            zxbcdt = 2 * d_inner + 2 * self.ssm_state + nheads
+            in_p = D * zxbcdt
+            conv = (d_inner + 2 * self.ssm_state) * self.ssm_conv
+            out_p = d_inner * D
+            head = 2 * nheads  # A_log, D skip
+            return in_p + conv + out_p + head
+
+        layers = self.n_layers
+        if self.family in ("ssm",):
+            n += layers * mamba_params()
+        elif self.family == "hybrid":
+            n_attn = sum(1 for i in range(layers) if self.is_attn_layer(i))
+            n_mamba = layers - n_attn
+            n += n_mamba * mamba_params()
+            # shared attention block: counted once (weights shared)
+            n += attn_params() + mlp_params(self.d_ff)
+        else:
+            for i in range(layers):
+                n += attn_params()
+                if self.is_moe_layer(i):
+                    e = self.n_experts
+                    if active_only:
+                        e = self.top_k + (1 if self.shared_expert else 0)
+                    n += e * mlp_params(self.d_ff) + D * self.n_experts  # + router
+                    if self.shared_expert and not active_only:
+                        n += mlp_params(self.d_ff)
+                else:
+                    n += mlp_params(self.d_ff)
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp; decoder additionally cross-attn
+            n += self.n_encoder_layers * (attn_params() + mlp_params(self.d_ff))
+            n += self.n_layers * attn_params()  # cross attention in decoder
+        return n
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Federated round configuration (paper §6.1 defaults)."""
+
+    algo: str = "fedcm"  # fedcm | fedavg | fedadam | scaffold | feddyn | mimelite
+    num_clients: int = 100
+    cohort_size: int = 10  # |S|
+    local_steps: int = 10  # K
+    alpha: float = 0.1  # FedCM / FedAdam server beta1-like; FedDyn reg strength reuses own field
+    eta_l: float = 0.1
+    eta_g: float = 1.0
+    eta_l_decay: float = 0.998  # exponential decay per round (appendix C.2)
+    weight_decay: float = 1e-3
+    # FedAdam
+    adam_beta2: float = 0.99
+    adam_tau: float = 1e-2
+    # FedDyn
+    feddyn_alpha: float = 0.01
+    # participation model: "fixed" = exactly cohort_size w/o replacement,
+    # "bernoulli" = each client independently with prob cohort_size/num_clients
+    participation: str = "fixed"
+    rounds: int = 100
+    seed: int = 0
+    # server momentum Δ_t storage/broadcast dtype — bf16 halves the extra
+    # FedCM downlink (§4.2) and the per-local-step momentum gathers (§Perf C)
+    momentum_dtype: str = "float32"
+    # cohort-aggregation dtype: the Δ mean over the (pod, data) axes is an
+    # all-reduce of a params-shaped tree — bf16 halves its bytes (production
+    # FL systems quantize aggregation much harder than this)
+    aggregate_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Centralized training driver config."""
+
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    remat: str = "none"  # none | full | dots
+    seed: int = 0
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+ARCH_IDS = [
+    "starcoder2-7b",
+    "llama4-maverick-400b-a17b",
+    "seamless-m4t-large-v2",
+    "dbrx-132b",
+    "zamba2-7b",
+    "llama3.2-1b",
+    "qwen3-14b",
+    "gemma3-12b",
+    "chameleon-34b",
+    "mamba2-1.3b",
+]
+
+_MODULE_FOR: Dict[str, str] = {
+    "starcoder2-7b": "starcoder2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "dbrx-132b": "dbrx_132b",
+    "zamba2-7b": "zamba2_7b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen3-14b": "qwen3_14b",
+    "gemma3-12b": "gemma3_12b",
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-") if name not in _MODULE_FOR else name
+    if key not in _MODULE_FOR:
+        # allow passing module-style names too
+        for k, mod in _MODULE_FOR.items():
+            if mod == name:
+                key = k
+                break
+    if key not in _MODULE_FOR:
+        raise KeyError(f"unknown architecture {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[key]}")
+    return mod.CONFIG
+
+
+def list_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests.
+
+    ≤2 layers, d_model ≤ 512, ≤4 experts — per the assignment contract.
+    """
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4)
+    if n_heads > 0:
+        head_dim = max(d_model // n_heads, 32)
+        n_kv = min(cfg.n_kv_heads, n_heads)
+        if n_heads % n_kv != 0:
+            n_kv = 1
+    else:  # attention-free (ssm)
+        head_dim = None
+        n_kv = 0
+    updates = dict(
+        name=cfg.name + "-reduced",
+        n_layers=2,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.n_experts:
+        updates["n_experts"] = min(cfg.n_experts, 4)
+        updates["top_k"] = min(cfg.top_k, 2)
+        updates["moe_every"] = min(cfg.moe_every, 2)
+    if cfg.family in ("ssm", "hybrid"):
+        updates["ssm_state"] = min(cfg.ssm_state, 16)
+        updates["ssm_head_dim"] = 32
+        updates["ssm_chunk"] = 16
+        if cfg.family == "hybrid":
+            updates["n_layers"] = 2
+            updates["attn_every"] = 2  # layer 1 is the shared attention block
+    if cfg.is_encoder_decoder:
+        updates["n_encoder_layers"] = 2
+    if cfg.sliding_window is not None:
+        updates["sliding_window"] = min(cfg.sliding_window, 8)
+    if cfg.local_global_pattern is not None:
+        updates["local_global_pattern"] = (1, 1)
+    return replace(cfg, **updates)
+
+
+def to_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

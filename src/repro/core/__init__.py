@@ -1,0 +1,38 @@
+"""FedCM core: the paper's algorithm + baselines + round engine."""
+from repro.core.algorithms import (
+    ALGORITHMS,
+    Algorithm,
+    ClientOutputs,
+    ServerState,
+    client_state_init,
+    get_algorithm,
+    server_init,
+)
+from repro.core.engine import (
+    FederatedEngine,
+    FedState,
+    RoundMetrics,
+    client_update,
+    cohort_capacity,
+    local_learning_rate,
+    make_eval_fn,
+    sample_cohort,
+)
+
+__all__ = [
+    "ALGORITHMS",
+    "Algorithm",
+    "ClientOutputs",
+    "ServerState",
+    "client_state_init",
+    "get_algorithm",
+    "server_init",
+    "FederatedEngine",
+    "FedState",
+    "RoundMetrics",
+    "client_update",
+    "cohort_capacity",
+    "local_learning_rate",
+    "make_eval_fn",
+    "sample_cohort",
+]

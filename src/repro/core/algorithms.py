@@ -1,0 +1,265 @@
+"""Federated optimization algorithms (the paper's contribution + baselines).
+
+Algorithm 2 of the paper (FedCM) and every baseline it compares against —
+FedAvg [McMahan+17], FedAdam [Reddi+20], SCAFFOLD [Karimireddy+20b],
+FedDyn [Acar+21] — plus MimeLite [Karimireddy+20a] from Appendix A, under
+one interface consumed by the round engine (``repro.core.engine``).
+
+Design: an algorithm is four pure pieces.
+
+* ``server_init(params)``          -> ServerState (momentum Δ_t, adam moments, …)
+* ``direction(bcast, cst, x, x0, g)`` -> the per-local-step update direction v
+  (FedCM line 8: ``v = α·g + (1−α)·Δ_t``; SCAFFOLD: ``g − c_i + c``; …)
+* ``client_finalize(...)``         -> per-client uplink extras + client-state delta
+* ``server_update(...)``           -> new params + ServerState from the aggregate
+
+The *paper-faithful* convention (appendix C.2) is used throughout: the
+pseudo-gradient is ``Δ_{t+1} = −(1/(η_l·K)) · mean_i(x_{i,K} − x_t)`` and the
+server applies ``x_{t+1} = x_t − (η_g·η_l·K)·Δ_{t+1}``, so ``η_g = 1``
+corresponds to plain client-model averaging.  FedAdam applies its adaptive
+update to the pseudo-gradient with an absolute server lr (η_g = 0.1 in the
+paper).
+
+Statelessness matters: FedCM/FedAvg/FedAdam/MimeLite keep NO per-client
+state (``client_state_init`` is None); SCAFFOLD and FedDyn keep per-client
+control variates, which is exactly what the paper blames for their
+degradation at 2% participation — the engine stores them stacked (N, …) and
+leaves non-participants stale, reproducing that failure mode honestly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.utils.trees import (
+    tree_add,
+    tree_axpy,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+
+class ServerState(NamedTuple):
+    """Server-side state shared by all algorithms (unused leaves = zeros)."""
+
+    momentum: Any  # FedCM Δ_t / FedAdam m / MimeLite m / FedDyn h
+    second_moment: Any  # FedAdam v
+    round: jax.Array  # int32 round counter t
+
+
+class ClientOutputs(NamedTuple):
+    delta: Any  # x_{i,K} − x_t  (the uplink payload of every algorithm)
+    state_delta: Any  # per-client state update (SCAFFOLD Δc_i, FedDyn Δλ_i) or zeros
+    extra: Any  # extra uplink pytree (MimeLite full-batch grad) or zeros
+
+
+class Algorithm(NamedTuple):
+    name: str
+    needs_client_state: bool
+    needs_momentum_broadcast: bool
+    needs_full_grad: bool  # MimeLite: full-batch grad at x_t
+    direction: Callable[..., Any]
+    client_finalize: Callable[..., ClientOutputs]
+    server_update: Callable[..., Any]
+
+
+def server_init(params, momentum_dtype="float32") -> ServerState:
+    mdt = jnp.dtype(momentum_dtype)
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, mdt), params)
+    return ServerState(momentum=z, second_moment=tree_zeros_like(params), round=jnp.int32(0))
+
+
+def client_state_init(params, cfg: FedConfig):
+    """Stacked (N, …) per-client control variates for stateful baselines."""
+    if cfg.algo not in ("scaffold", "feddyn"):
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((cfg.num_clients, *p.shape), p.dtype), params
+    )
+
+
+# ----------------------------------------------------------------------
+# per-algorithm pieces
+# ----------------------------------------------------------------------
+# All ``direction`` functions share the signature
+#   direction(cfg, bcast_momentum, client_state, x, x0, g) -> v
+# where x is the current local iterate, x0 = x_t the round anchor, g the
+# (weight-decayed) minibatch gradient.
+
+
+def _dir_fedavg(cfg, m, cst, x, x0, g):
+    return g
+
+
+def _dir_fedcm(cfg, m, cst, x, x0, g):
+    # Algorithm 2, line 8: v = α·g + (1−α)·Δ_t
+    return jax.tree_util.tree_map(
+        lambda gi, mi: cfg.alpha * gi + (1.0 - cfg.alpha) * mi, g, m
+    )
+
+
+def _dir_mimelite(cfg, m, cst, x, x0, g):
+    # MimeLite w/ momentum-SGD statistics: d = (1−β)·g + β·m, β = 1−α.
+    # Identical functional form to FedCM — the difference is how m is
+    # *updated* (full-batch grads at x_t; see server_update + engine).
+    return jax.tree_util.tree_map(
+        lambda gi, mi: cfg.alpha * gi + (1.0 - cfg.alpha) * mi, g, m
+    )
+
+
+def _dir_scaffold(cfg, m, cst, x, x0, g):
+    # SCAFFOLD option: v = g − c_i + c;  cst = (c_i, c broadcast via m slot is
+    # NOT used — c rides in bcast).  Here cst is a tuple (c_i, c).
+    c_i, c = cst
+    return jax.tree_util.tree_map(lambda gi, ci, cg: gi - ci + cg, g, c_i, c)
+
+
+def _dir_feddyn(cfg, m, cst, x, x0, g):
+    # FedDyn local objective: f_i(x) − ⟨λ_i, x⟩ + (α_dyn/2)‖x − x_t‖²
+    lam_i = cst
+    a = cfg.feddyn_alpha
+    return jax.tree_util.tree_map(
+        lambda gi, li, xi, x0i: gi - li + a * (xi - x0i), g, lam_i, x, x0
+    )
+
+
+# --- client_finalize(cfg, x0, xK, client_state, eta_l, full_grad) -> ClientOutputs
+
+
+def _fin_plain(cfg, x0, xK, cst, eta_l, full_grad):
+    delta = tree_sub(xK, x0)
+    return ClientOutputs(delta, tree_zeros_like(x0), tree_zeros_like(x0))
+
+
+def _fin_mimelite(cfg, x0, xK, cst, eta_l, full_grad):
+    delta = tree_sub(xK, x0)
+    return ClientOutputs(delta, tree_zeros_like(x0), full_grad)
+
+
+def _fin_scaffold(cfg, x0, xK, cst, eta_l, full_grad):
+    c_i, c = cst
+    delta = tree_sub(xK, x0)
+    K = cfg.local_steps
+    # option II: c_i⁺ = c_i − c + (x_t − x_{i,K}) / (K·η_l)
+    c_new = jax.tree_util.tree_map(
+        lambda ci, cg, d: ci - cg - d / (K * eta_l), c_i, c, delta
+    )
+    return ClientOutputs(delta, tree_sub(c_new, c_i), tree_zeros_like(x0))
+
+
+def _fin_feddyn(cfg, x0, xK, cst, eta_l, full_grad):
+    delta = tree_sub(xK, x0)
+    # λ_i ← λ_i − α_dyn·(θ_i − x_t)
+    state_delta = tree_scale(delta, -cfg.feddyn_alpha)
+    return ClientOutputs(delta, state_delta, tree_zeros_like(x0))
+
+
+# --- server_update(cfg, params, st, mean_delta, mean_state_delta, mean_extra,
+#                   n_active, eta_l) -> (params, ServerState)
+
+
+def _eta_g_eff(cfg: FedConfig, eta_l) -> jax.Array:
+    # appendix C.2: η_g is reported in "averaging" units; effective server
+    # step on Δ_{t+1} is η_g·η_l·K, i.e. x ← x + η_g·mean(Δ_i).
+    return cfg.eta_g * eta_l * cfg.local_steps
+
+
+def _pseudo_grad(mean_delta, eta_l, K):
+    """Δ_{t+1} = −(1/(η_l·K))·mean_i(Δ_i) — Algorithm 1/2 line 13."""
+    return tree_scale(mean_delta, -1.0 / (eta_l * K))
+
+
+def _srv_fedavg(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
+    new_params = tree_axpy(-_eta_g_eff(cfg, eta_l), pg, params)
+    return new_params, st._replace(momentum=pg, round=st.round + 1)
+
+
+def _srv_fedcm(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    # Algorithm 2 lines 13–14: Δ_{t+1} IS the new momentum (Lemma 4.1 shows it
+    # equals α·Δ̃_t + (1−α)·Δ_t because clients descend along v, not g).
+    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
+    new_params = tree_axpy(-_eta_g_eff(cfg, eta_l), pg, params)
+    mdt = jnp.dtype(getattr(cfg, "momentum_dtype", "float32"))
+    m_store = jax.tree_util.tree_map(lambda x: x.astype(mdt), pg)
+    return new_params, st._replace(momentum=m_store, round=st.round + 1)
+
+
+def _srv_fedadam(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    # Reddi+20 server Adam on the pseudo-gradient; β1 = 1−α, τ = adam_tau.
+    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
+    m = jax.tree_util.tree_map(
+        lambda mi, gi: (1.0 - cfg.alpha) * mi + cfg.alpha * gi, st.momentum, pg
+    )
+    v = jax.tree_util.tree_map(
+        lambda vi, gi: cfg.adam_beta2 * vi + (1.0 - cfg.adam_beta2) * jnp.square(gi),
+        st.second_moment,
+        pg,
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - cfg.eta_g * mi / (jnp.sqrt(vi) + cfg.adam_tau),
+        params,
+        m,
+        v,
+    )
+    return new_params, ServerState(momentum=m, second_moment=v, round=st.round + 1)
+
+
+def _srv_scaffold(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    new_params = tree_axpy(cfg.eta_g, mean_delta, params)  # x + η_g·mean(Δ_i)
+    # c ← c + (|S|/N)·mean(Δc_i); the server's c rides in st.momentum.
+    frac = n_active.astype(jnp.float32) / cfg.num_clients
+    c = tree_axpy(frac, mean_sd, st.momentum)
+    return new_params, st._replace(momentum=c, round=st.round + 1)
+
+
+def _srv_feddyn(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    # h ← h − α_dyn·(|S|/N)·mean(Δ_i);  x ← (mean of client models) − h/α_dyn
+    a = cfg.feddyn_alpha
+    frac = n_active.astype(jnp.float32) / cfg.num_clients
+    h = tree_axpy(-a * frac, mean_delta, st.momentum)
+    mean_model = tree_add(params, mean_delta)
+    new_params = tree_axpy(-1.0 / a, h, mean_model)
+    return new_params, st._replace(momentum=h, round=st.round + 1)
+
+
+def _srv_mimelite(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
+    # x ← x + η_g·mean(Δ_i);  m ← (1−α)·m + α·mean_i ∇f_i(x_t) (FULL batch —
+    # Appendix A: this is the FedCM-vs-MimeLite distinction).
+    new_params = tree_axpy(cfg.eta_g, mean_delta, params)
+    m = jax.tree_util.tree_map(
+        lambda mi, gi: (1.0 - cfg.alpha) * mi + cfg.alpha * gi, st.momentum, mean_extra
+    )
+    return new_params, st._replace(momentum=m, round=st.round + 1)
+
+
+ALGORITHMS: Dict[str, Algorithm] = {
+    "fedavg": Algorithm(
+        "fedavg", False, False, False, _dir_fedavg, _fin_plain, _srv_fedavg
+    ),
+    "fedcm": Algorithm(
+        "fedcm", False, True, False, _dir_fedcm, _fin_plain, _srv_fedcm
+    ),
+    "fedadam": Algorithm(
+        "fedadam", False, False, False, _dir_fedavg, _fin_plain, _srv_fedadam
+    ),
+    "scaffold": Algorithm(
+        "scaffold", True, True, False, _dir_scaffold, _fin_scaffold, _srv_scaffold
+    ),
+    "feddyn": Algorithm(
+        "feddyn", True, False, False, _dir_feddyn, _fin_feddyn, _srv_feddyn
+    ),
+    "mimelite": Algorithm(
+        "mimelite", False, True, True, _dir_mimelite, _fin_mimelite, _srv_mimelite
+    ),
+}
+
+
+def get_algorithm(name: str) -> Algorithm:
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown federated algorithm {name!r}; known: {sorted(ALGORITHMS)}")
+    return ALGORITHMS[name]

@@ -1,0 +1,322 @@
+"""The federated round engine.
+
+One communication round (Algorithm 2 of the paper) is a single jitted —
+and, on a mesh, pjit-sharded — program:
+
+    sample cohort  →  broadcast (x_t, Δ_t)  →  vmap over clients of
+    [lax.scan over K local steps]  →  masked-mean aggregate  →  server update
+
+The engine is architecture-agnostic: it only sees ``loss_fn(params, batch)``
+(DESIGN.md §7 — FedCM is optimizer-level).  On a TPU mesh the cohort axis is
+sharded over ("pod","data") and each client's parameters may additionally be
+tensor-sharded on "model"; the aggregation mean lowers to an all-reduce over
+the cohort axes — the server/client message pattern of the paper becomes
+collectives (DESIGN.md §3).
+
+Participation models (§6.1 of the paper):
+
+* ``fixed``      — exactly ``cohort_size`` clients, uniform w/o replacement.
+* ``bernoulli``  — every client independently with prob cohort_size/N.  For a
+  jit-static shape we draw the cohort count s ~ Binomial(N, p) (clipped to a
+  capacity), take the first s entries of a random permutation, and mask the
+  rest; conditioned on s this equals independent-Bernoulli participation.
+
+Payload accounting mirrors §4.2: FedCM doubles only the DOWNLINK (x_t plus
+Δ_t); uplink is one delta — unchanged from FedAvg.  SCAFFOLD pays both ways
+(c down, Δc_i up); MimeLite pays an extra full-batch gradient up.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core.algorithms import (
+    Algorithm,
+    ClientOutputs,
+    ServerState,
+    client_state_init,
+    get_algorithm,
+    server_init,
+)
+from repro.utils.trees import (
+    tree_axpy,
+    tree_bytes,
+    tree_scale,
+    tree_zeros_like,
+)
+
+
+class FedState(NamedTuple):
+    params: Any
+    server: ServerState
+    client_states: Any  # stacked (N, …) or None
+    rng: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array  # mean local training loss over cohort × K steps
+    n_active: jax.Array
+    delta_norm: jax.Array  # ‖mean Δ_i‖
+    momentum_norm: jax.Array  # ‖Δ_t‖ (server momentum entering the round)
+    eta_l: jax.Array
+    bytes_down: jax.Array  # server→clients this round (f32 elements × 4)
+    bytes_up: jax.Array  # clients→server this round
+
+
+def cohort_capacity(cfg: FedConfig) -> int:
+    """Static cohort axis length. ``fixed``: exactly S. ``bernoulli``: a
+    Binomial(N, p) tail bound — mean + 5σ, clipped to N (p(overflow) < 3e-7;
+    overflow clips the round's cohort, a negligible bias at these sizes)."""
+    if cfg.participation == "fixed":
+        return cfg.cohort_size
+    p = cfg.cohort_size / cfg.num_clients
+    sd = math.sqrt(cfg.num_clients * p * (1 - p))
+    return min(cfg.num_clients, int(math.ceil(cfg.cohort_size + 5 * sd)))
+
+
+def sample_cohort(rng, cfg: FedConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (client_ids (C,), active_mask (C,)) with C = cohort_capacity."""
+    cap = cohort_capacity(cfg)
+    k_perm, k_n = jax.random.split(rng)
+    ids = jax.random.choice(k_perm, cfg.num_clients, (cap,), replace=False)
+    if cfg.participation == "fixed":
+        return ids, jnp.ones((cap,), bool)
+    p = cfg.cohort_size / cfg.num_clients
+    draws = jax.random.bernoulli(k_n, p, (cfg.num_clients,))
+    s = jnp.clip(jnp.sum(draws).astype(jnp.int32), 1, cap)
+    return ids, jnp.arange(cap) < s
+
+
+def local_learning_rate(cfg: FedConfig, t) -> jax.Array:
+    """Appendix C.2: exponential per-round decay of η_l."""
+    return jnp.float32(cfg.eta_l) * jnp.float32(cfg.eta_l_decay) ** t.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# client update
+# ----------------------------------------------------------------------
+
+
+def client_update(
+    algo: Algorithm,
+    cfg: FedConfig,
+    loss_fn: Callable[[Any, Any], jax.Array],
+    params,  # x_t (broadcast)
+    bcast_momentum,  # Δ_t (or c for scaffold; zeros otherwise)
+    client_state,  # this client's c_i / λ_i slice (or zeros pytree)
+    batches,  # pytree of (K, B, …) local minibatches
+    eta_l,
+    full_grad_batch=None,  # MimeLite: the client's whole dataset
+    unroll: bool = False,  # dry-run analysis: count every local step
+) -> Tuple[ClientOutputs, jax.Array]:
+    """One client's K local steps.  Returns (outputs, mean local loss)."""
+    x0 = params
+    cst = (client_state, bcast_momentum) if algo.name == "scaffold" else client_state
+
+    def step(x, batch):
+        loss, g = jax.value_and_grad(loss_fn)(x, batch)
+        if cfg.weight_decay:
+            g = tree_axpy(cfg.weight_decay, x, g)
+        v = algo.direction(cfg, bcast_momentum, cst, x, x0, g)
+        # keep the carry dtype stable (bf16 params + f32 momentum promote)
+        x = jax.tree_util.tree_map(
+            lambda xi, vi: (xi - eta_l * vi).astype(xi.dtype), x, v
+        )
+        return x, loss
+
+    xK, losses = jax.lax.scan(step, x0, batches,
+                              unroll=cfg.local_steps if unroll else 1)
+
+    full_grad = tree_zeros_like(x0)
+    if algo.needs_full_grad:
+        assert full_grad_batch is not None
+        full_grad = jax.grad(loss_fn)(x0, full_grad_batch)
+
+    outs = algo.client_finalize(cfg, x0, xK, cst, eta_l, full_grad)
+    return outs, jnp.mean(losses)
+
+
+# ----------------------------------------------------------------------
+# engine
+# ----------------------------------------------------------------------
+
+
+class FederatedEngine:
+    """Builds the jitted round step for (algorithm, loss_fn, data layout).
+
+    Usage::
+
+        eng = FederatedEngine(cfg, loss_fn)
+        state = eng.init(params, rng)
+        state, metrics = eng.run_round(state, data)     # data: FederatedData
+        # or, lower-level / dry-runnable:
+        state, metrics = eng.round_step(state, batches, ids, mask, full_batches)
+    """
+
+    def __init__(
+        self,
+        cfg: FedConfig,
+        loss_fn: Callable[[Any, Any], jax.Array],
+        batch_size: int = 50,
+        client_sharding: Optional[Any] = None,  # NamedSharding for the cohort axis
+    ) -> None:
+        self.cfg = cfg
+        self.algo = get_algorithm(cfg.algo)
+        self.loss_fn = loss_fn
+        self.batch_size = batch_size
+        self.client_sharding = client_sharding
+        self.analysis_unroll = False  # dry-run analysis form
+        self._round_step = jax.jit(self._round_step_impl)
+
+    # -------------------------------------------------- init
+    def init(self, params, rng) -> FedState:
+        return FedState(
+            params=params,
+            server=server_init(params, self.cfg.momentum_dtype),
+            client_states=client_state_init(params, self.cfg),
+            rng=rng,
+        )
+
+    # -------------------------------------------------- payload accounting
+    def payload_bytes(self, params) -> Dict[str, int]:
+        """Per-client per-round communication in bytes (§4.2 discussion)."""
+        P = tree_bytes(params)
+        down = P  # x_t always goes down
+        up = P  # Δ_i always goes up
+        if self.algo.needs_momentum_broadcast:
+            down += P  # Δ_t (fedcm/mimelite) or c (scaffold)
+        if self.algo.name == "scaffold":
+            up += P  # Δc_i — feddyn's λ_i, by contrast, never leaves the client
+        if self.algo.needs_full_grad:
+            up += P  # MimeLite full-batch gradient
+        return {"down_per_client": down, "up_per_client": up}
+
+    # -------------------------------------------------- round
+    def _round_step_impl(self, state: FedState, batches, ids, mask, full_batches):
+        cfg, algo = self.cfg, self.algo
+        eta_l = local_learning_rate(cfg, state.server.round)
+
+        # gather per-client states for the cohort (stale entries untouched)
+        if algo.needs_client_state:
+            cohort_cst = jax.tree_util.tree_map(lambda a: a[ids], state.client_states)
+        else:
+            cohort_cst = jax.tree_util.tree_map(
+                lambda p: jnp.zeros((ids.shape[0], *p.shape), p.dtype), state.params
+            )
+
+        def one_client(cst_i, batches_i, full_i):
+            return client_update(
+                algo, cfg, self.loss_fn, state.params, state.server.momentum,
+                cst_i, batches_i, eta_l, full_grad_batch=full_i,
+                unroll=self.analysis_unroll,
+            )
+
+        outs, losses = jax.vmap(one_client)(cohort_cst, batches, full_batches)
+
+        # masked cohort mean (bernoulli: only active entries count)
+        w = mask.astype(jnp.float32)
+        n_active = jnp.sum(w)
+
+        agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
+
+        def mmean(tree):
+            return jax.tree_util.tree_map(
+                lambda a: (
+                    jnp.tensordot(w.astype(agg_dt), a.astype(agg_dt), axes=(0, 0))
+                    .astype(jnp.float32) / n_active
+                ),
+                tree,
+            )
+
+        mean_delta = mmean(outs.delta)
+        mean_sd = mmean(outs.state_delta)
+        mean_extra = mmean(outs.extra)
+
+        new_params, new_server = algo.server_update(
+            cfg, state.params, state.server, mean_delta, mean_sd, mean_extra,
+            n_active, eta_l,
+        )
+
+        # scatter updated client states back (only active cohort members)
+        new_cst = state.client_states
+        if algo.needs_client_state:
+            def scatter(a, d):
+                upd = a[ids] + d * w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
+                return a.at[ids].set(upd)
+
+            new_cst = jax.tree_util.tree_map(scatter, state.client_states, outs.state_delta)
+
+        pay = self.payload_bytes(state.params)
+        metrics = RoundMetrics(
+            loss=jnp.sum(losses * w) / n_active,
+            n_active=n_active,
+            delta_norm=_tree_norm(mean_delta),
+            momentum_norm=_tree_norm(state.server.momentum),
+            eta_l=eta_l,
+            bytes_down=n_active * jnp.float32(pay["down_per_client"]),
+            bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+        )
+        return FedState(new_params, new_server, new_cst, state.rng), metrics
+
+    def round_step(self, state, batches, ids, mask, full_batches=None):
+        if full_batches is None:
+            # zero-size placeholder with the right treedef for vmap
+            full_batches = jax.tree_util.tree_map(
+                lambda b: b[:, 0], batches
+            )  # (C, B, …) dummy; unused unless needs_full_grad
+        return self._round_step(state, batches, ids, mask, full_batches)
+
+    # -------------------------------------------------- data-driven round
+    def run_round(self, state: FedState, data) -> Tuple[FedState, RoundMetrics]:
+        """Samples cohort + minibatches from a FederatedData and steps."""
+        rng, k_cohort, k_batch = jax.random.split(state.rng, 3)
+        ids, mask = sample_cohort(k_cohort, self.cfg)
+        raw = data.sample_round_batches(
+            k_batch, ids, self.cfg.local_steps, self.batch_size
+        )
+        batches = self._to_loss_batches(raw)
+        full = None
+        if self.algo.needs_full_grad:
+            full = self._to_loss_batches(data.full_client_batch(ids))
+        state = state._replace(rng=rng)
+        return self.round_step(state, batches, ids, mask, full)
+
+    @staticmethod
+    def _to_loss_batches(raw):
+        """{"x","y"} → loss_fn batch dict (pass-through for custom dicts)."""
+        return raw
+
+
+def _tree_norm(t):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(t)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.float32(0.0)
+
+
+# ----------------------------------------------------------------------
+# evaluation
+# ----------------------------------------------------------------------
+
+
+def make_eval_fn(predict_fn: Callable[[Any, Any], jax.Array], batch_size: int = 1000):
+    """predict_fn(params, x) -> logits.  Returns eval(params, x, y) -> acc."""
+
+    @jax.jit
+    def eval_batch(params, x, y):
+        logits = predict_fn(params, x)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    def evaluate(params, x, y):
+        n = x.shape[0]
+        accs, ws = [], []
+        for i in range(0, n, batch_size):
+            xb, yb = x[i : i + batch_size], y[i : i + batch_size]
+            accs.append(float(eval_batch(params, xb, yb)))
+            ws.append(len(xb))
+        return float(sum(a * w for a, w in zip(accs, ws)) / sum(ws))
+
+    return evaluate

@@ -1,0 +1,18 @@
+from repro.data.dirichlet import dirichlet_partition, label_distribution, heterogeneity_score
+from repro.data.synthetic import (
+    make_synthetic_classification,
+    make_synthetic_images,
+    make_synthetic_lm,
+)
+from repro.data.pipeline import FederatedData, lm_batch_iterator
+
+__all__ = [
+    "dirichlet_partition",
+    "label_distribution",
+    "heterogeneity_score",
+    "make_synthetic_classification",
+    "make_synthetic_images",
+    "make_synthetic_lm",
+    "FederatedData",
+    "lm_batch_iterator",
+]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §3).
+
+* ``fedcm_update``    — fused FedCM client step  v = α·g + (1−α)·Δ; x ← x − η·v
+* ``flash_attention`` — blocked online-softmax attention (GQA, sliding window)
+* ``ssd_scan``        — chunked Mamba2 SSD scan with VMEM-carried state
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle used by tests).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.fedcm_update.ops import fedcm_step, fedcm_step_tree
+
+__all__ = ["fedcm_step", "fedcm_step_tree"]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused FedCM client-momentum parameter update.
+
+The paper's only new compute is the per-local-step blend
+``x ← x − η_l·(α·g + (1−α)·Δ_t)``.  On TPU this is a pure HBM-bandwidth op;
+fusing the blend and the SGD step streams each of (x, g, Δ) through VMEM
+exactly once and writes x once — 4 HBM transfers/element instead of 6 for
+the unfused pair of ops (≈1.5× on the roofline's memory term for the update
+phase).
+
+Tiling: inputs are flattened and padded to a multiple of the block
+(``block_elems``), then viewed as (n_blocks, 8, block_elems//8) so each
+BlockSpec tile is a (8, L) VMEM-resident vector-lane-aligned slab.  α and
+η_l arrive in SMEM as (1,1) scalars (they change every round — η_l decays —
+so baking them as Python constants would force a recompile per round).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+DEFAULT_BLOCK = 64 * 1024  # elements per grid step: 64k f32 = 256 KiB/input
+
+
+def _kernel(alpha_ref, eta_ref, x_ref, g_ref, d_ref, out_ref):
+    alpha = alpha_ref[0, 0]
+    eta = eta_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    v = alpha * g + (1.0 - alpha) * d
+    out_ref[...] = (x - eta * v).astype(out_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_elems", "interpret"))
+def fedcm_step_flat(x, g, delta, alpha, eta_l, *, block_elems: int = DEFAULT_BLOCK,
+                    interpret: bool = True):
+    """x, g, delta: 1-D arrays of equal length.  Returns updated x."""
+    n = x.shape[0]
+    rows = block_elems // LANE
+    padded = pl.cdiv(n, block_elems) * block_elems
+    pad = padded - n
+
+    def prep(a):
+        a = jnp.pad(a, (0, pad))
+        return a.reshape(padded // LANE, LANE)
+
+    xr, gr, dr = prep(x), prep(g), prep(delta)
+    nblocks = padded // block_elems
+
+    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    smem = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nblocks,),
+        in_specs=[smem, smem, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(
+        jnp.asarray(alpha, jnp.float32).reshape(1, 1),
+        jnp.asarray(eta_l, jnp.float32).reshape(1, 1),
+        xr, gr, dr,
+    )
+    return out.reshape(padded)[:n]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused FedCM client update (Algorithm 2 line 8–9).
+
+    v      = α·g + (1−α)·Δ
+    x_new  = x − η_l·v
+
+Unfused this is 3 HBM reads (x, g, Δ) + 2 writes (v, x) per element plus an
+intermediate v materialization; the kernel does 3 reads + 1 write in one
+pass (the whole point — the op is purely memory-bound, AI ≈ 0.4 flop/byte).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedcm_step_ref(x, g, delta, alpha, eta_l):
+    v = alpha * g.astype(jnp.float32) + (1.0 - alpha) * delta.astype(jnp.float32)
+    return (x.astype(jnp.float32) - eta_l * v).astype(x.dtype)

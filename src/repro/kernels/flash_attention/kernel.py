@@ -1,0 +1,161 @@
+"""Pallas TPU flash attention (blocked online softmax), GQA + sliding window.
+
+TPU adaptation notes (DESIGN.md §3): this is not a port of the CUDA
+FlashAttention tiling.  The grid is (B, H, n_q_blocks, n_kv_blocks) with the
+KV axis innermost — on TPU the innermost grid dimension executes
+*sequentially* on a core, so the running (m, l, acc) online-softmax state
+lives in VMEM scratch and persists across KV steps (the Pallas-TPU analogue
+of a CUDA persistent-CTA loop).  Block shapes default to (128, head_dim) —
+MXU-aligned on the 128 lane dimension.
+
+Causal / windowed blocks that are fully masked are skipped with
+``pl.when`` (compute skipped; the DMA for that tile still lands — the
+next-level optimization on real hardware is a data-dependent grid, noted in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # (1, 1, bq, hd)
+    k_ref,  # (1, 1, bkv, hd)
+    v_ref,  # (1, 1, bkv, hd)
+    out_ref,  # (1, 1, bq, hd)
+    m_scr,  # (bq, 1) f32
+    l_scr,  # (bq, 1) f32
+    acc_scr,  # (bq, hd) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    bq: int,
+    bkv: int,
+    n_kv: int,
+    q_offset: int,
+    sq_valid: int,
+    skv_valid: int,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + q_offset
+    kpos = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # block-level skip: is any (q, kv) pair in this tile unmasked?
+    q_last = iq * bq + bq - 1 + q_offset
+    q_first = iq * bq + q_offset
+    kv_first = ikv * bkv
+    kv_last = ikv * bkv + bkv - 1
+    live = True
+    if causal:
+        live = q_last >= kv_first  # else the whole tile is above the diagonal
+    if window is not None:
+        live = jnp.logical_and(live, q_first - kv_last < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bkv)
+
+        mask = (qpos - q_offset < sq_valid) & (kpos < skv_valid)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, hd)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0, 0] = (acc_scr[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "bq", "bkv", "interpret"),
+)
+def flash_attention_bhsd(
+    q,  # (B, H, Sq, hd)   — head-major layout (ops.py transposes)
+    k,  # (B, Hkv, Skv, hd)
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+):
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = float(scale if scale is not None else hd**-0.5)
+
+    bq = min(bq, max(8, 1 << (Sq - 1).bit_length()))
+    bkv = min(bkv, max(8, 1 << (Skv - 1).bit_length()))
+    n_q = pl.cdiv(Sq, bq)
+    n_kv = pl.cdiv(Skv, bkv)
+    q_pad = n_q * bq - Sq
+    kv_pad = n_kv * bkv - Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window, bq=bq, bkv=bkv,
+        n_kv=n_kv, q_offset=q_offset, sq_valid=Sq, skv_valid=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq] if q_pad else out

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Materializes the full (Sq, Skv) score matrix — O(S²) memory, only for
+test-sized shapes.  Supports GQA grouping, causal masking and sliding
+window, matching the kernel's contract exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q,  # (B, Sq, H, hd)
+    k,  # (B, Skv, Hkv, hd)
+    v,  # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,  # absolute position of q[0] (decode/prefill continuation)
+):
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else hd**-0.5
+
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s.reshape(B, H, Sq, Skv) * scale
+
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    pg = p.reshape(B, Hkv, G, Sq, Skv)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pg, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

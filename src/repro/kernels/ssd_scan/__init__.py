@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd
+
+__all__ = ["ssd"]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the SSD scan kernel.
+
+``ssd_sequential_ref`` is the definitionally-correct O(S) recurrence
+(the SSM semantics the chunked algorithm must match):
+
+    h_t = exp(dt_t · A) · h_{t−1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t
+
+``ssd_chunked`` (repro.models.mamba2) is the chunked restatement; the Pallas
+kernel mirrors the chunked algorithm's block structure.  Tests close the
+triangle: kernel ≈ chunked ≈ sequential.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm):
+    """x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm, Cm (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        dA = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])  # (B,H)
+        upd = (dt_t[..., None].astype(jnp.float32) * x_t.astype(jnp.float32))[..., None] \
+            * B_t[:, None, None, :].astype(jnp.float32)  # (B,H,P,N)
+        h = dA[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).astype(x.dtype), hT

@@ -1,0 +1,84 @@
+"""Post-SPMD HLO introspection: collective bytes + op census.
+
+``collective_stats(compiled.as_text())`` sums the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the partitioned module (cost_analysis does not report
+collectives — this is the roofline's third term).  Result-shape bytes are
+the per-device payload entering the interconnect; ring-algorithm hop
+inflation is applied by the roofline model, not here.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `%name = bf16[1,2,3]{...} all-gather(...)` / tuple results
+#   `%x = (f32[8,128], f32[8,128]) all-reduce(...)`
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {"count": n, "bytes": result_bytes}} + "total"."""
+    out: Dict[str, Dict[str, float]] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        # async pairs (-start/-done) would double count: the regex strips the
+        # suffix, so count every match but skip "-done(" lines.
+        start = m.start()
+        line_end = hlo_text.find("(", m.end() - 1)
+        window = hlo_text[m.start(): m.end()]
+        if "-done(" in hlo_text[m.start(): m.end() + 8]:
+            continue
+        b = _shape_bytes(m.group("shapes"))
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    total = {
+        "count": sum(v["count"] for v in out.values()),
+        "bytes": sum(v["bytes"] for v in out.values()),
+    }
+    out["total"] = total
+    return out
+
+
+def op_census(hlo_text: str, top: int = 12) -> Dict[str, int]:
+    """Frequency of HLO op kinds — used to spot remat recompute blowups."""
+    ops = re.findall(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+([a-z0-9-]+)\(", hlo_text)
+    census: Dict[str, int] = {}
+    for o in ops:
+        census[o] = census.get(o, 0) + 1
+    return dict(sorted(census.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,359 @@
+"""Step builders: the jit-able train / prefill / serve programs + shardings.
+
+Everything the dry-run lowers and the drivers execute comes from here, so
+the compiled artifact measured by the roofline IS the program a real run
+would execute.
+
+``build_step(cfg, shape, mesh, knobs)`` dispatches on ``shape.kind``:
+
+* train   → ``train_step(params, opt_state, batch)`` — loss → grads (with
+  optional microbatch grad accumulation) → clip → AdamW → new params.
+* prefill → ``prefill_step(params, batch)`` — forward, emit last-token
+  logits + a *filled* KV/SSM cache (true prefill, not a logits-only pass).
+* decode  → ``serve_step(params, token, cache, pos)`` — one token against a
+  seq_len-deep cache, greedy next token.
+
+Knobs (per-arch adaptation lives in launch.dryrun.ARCH_KNOBS):
+  microbatches     — grad-accumulation chunks of the global batch
+  remat            — "none" | "full" | "dots"
+  param_dtype      — storage dtype for weights (bf16 on the TPU target)
+  moment_dtype     — AdamW moment dtype (bf16 halves optimizer HBM)
+  seq_shard_acts   — shard the residual stream's sequence dim over "model"
+                     between layers (sequence parallelism; §Perf lever)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import build_model
+from repro.models.layers import ParallelContext
+from repro.optim.optimizers import adamw, clip_by_global_norm
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+from repro.utils.trees import tree_add
+
+
+@dataclass(frozen=True)
+class Knobs:
+    microbatches: int = 1
+    remat: str = "full"
+    param_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"
+    seq_shard_acts: bool = False
+    learning_rate: float = 3e-4
+    grad_clip: float = 1.0
+    use_kernels: bool = False
+    scan_unroll: int = 1  # dry-run: fully unroll layer scans so
+                          # cost_analysis counts every trip
+    serve_params: str = "fsdp"  # "fsdp" | "replicated" — decode param layout
+                                # (replicated = TP-only; §Perf hillclimb B)
+    grad_accum_dtype: str = "float32"  # microbatch grad accumulator; bf16
+                                       # halves the two biggest train buffers
+                                       # for 100B+ models
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args_sds: Tuple[Any, ...]  # ShapeDtypeStructs, positional
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def lower(self):
+        fn = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return fn.lower(*self.args_sds)
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+
+def make_parallel(mesh, global_batch: int) -> ParallelContext:
+    names = mesh.axis_names
+    model_axis = "model"
+    data_axes = tuple(n for n in names if n != model_axis)
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    if global_batch % dsize != 0:
+        data_axes = ()  # unshardable batch (long_500k B=1): replicate acts
+    return ParallelContext(mesh=mesh, data_axes=data_axes, model_axis=model_axis)
+
+
+def _ns(mesh, spec_tree):
+    is_p = lambda x: isinstance(x, P)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=is_p
+    )
+
+
+def _params_sds(model, cfg: ModelConfig, param_dtype: str):
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    dt = jnp.dtype(param_dtype)
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dt)
+        return x
+
+    return jax.tree_util.tree_map(cast, sds)
+
+
+# ----------------------------------------------------------------------
+# train
+# ----------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh, knobs: Knobs) -> StepBundle:
+    model = build_model(cfg)
+    parallel = make_parallel(mesh, shape.global_batch)
+    opt = adamw(knobs.learning_rate, moment_dtype=jnp.dtype(knobs.moment_dtype))
+
+    M = knobs.microbatches
+    assert shape.global_batch % M == 0, (shape.global_batch, M)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss_fn(
+            params, mb, parallel=parallel, remat=knobs.remat,
+            use_kernels=knobs.use_kernels, scan_unroll=knobs.scan_unroll,
+        )
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            # grad accumulation: scan over M microbatches, f32 accumulator
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch
+            )
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            acc_dt = jnp.dtype(knobs.grad_accum_dtype)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+            # analysis form (scan_unroll>1): unroll so cost_analysis counts
+            # every microbatch trip, mirroring the layer-scan unroll
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0)), micro,
+                unroll=M if knobs.scan_unroll > 1 else 1,
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+            loss = loss_sum / M
+            metrics = {"xent": loss, "aux": jnp.float32(0.0)}
+
+        grads, gnorm = clip_by_global_norm(grads, knobs.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            params, updates,
+        )
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, out_metrics
+
+    p_sds = _params_sds(model, cfg, knobs.param_dtype)
+    o_sds = jax.eval_shape(opt.init, p_sds)
+    b_sds = model.input_specs(shape)
+
+    p_spec = param_specs(p_sds, cfg, mesh)
+    o_spec = (P(), p_spec, p_spec)
+    b_spec = batch_specs(cfg, shape, mesh)
+    m_spec = {"loss": P(), "grad_norm": P()}
+
+    return StepBundle(
+        name=f"train:{cfg.name}:{shape.name}",
+        fn=train_step,
+        args_sds=(p_sds, o_sds, b_sds),
+        in_shardings=(_ns(mesh, p_spec), _ns(mesh, o_spec), _ns(mesh, b_spec)),
+        out_shardings=(_ns(mesh, p_spec), _ns(mesh, o_spec), _ns(mesh, m_spec)),
+        donate_argnums=(0, 1),
+        meta=dict(kind="train", microbatches=M, remat=knobs.remat),
+    )
+
+
+# ----------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh, knobs: Knobs) -> StepBundle:
+    model = build_model(cfg)
+    parallel = make_parallel(mesh, shape.global_batch)
+
+    p_sds = _params_sds(model, cfg, knobs.param_dtype)
+    p_spec = param_specs(p_sds, cfg, mesh)
+    b_sds = model.input_specs(shape)
+    b_spec = batch_specs(cfg, shape, mesh)
+    fsdp = tuple(n for n in mesh.axis_names if n != "model")
+    b_ax = fsdp if shape.global_batch % _prod(mesh, fsdp) == 0 else None
+
+    if cfg.is_encoder_decoder:
+        # prefill = encode the source + precompute per-layer cross-K/V
+        from repro.models import encdec
+
+        def prefill_step(params, batch):
+            enc_out = encdec.encode(
+                params, batch["src_embeds"], cfg=cfg, parallel=parallel,
+                remat=knobs.remat, scan_unroll=knobs.scan_unroll,
+            )
+            cross = jax.vmap(lambda lp: encdec.encode_kv(lp["cross_attn"], enc_out, cfg=cfg))(
+                params["dec"]
+            )
+            return enc_out, cross
+
+        hd = cfg.resolved_head_dim
+        B, S = shape.global_batch, shape.seq_len
+        cross_spec = {"k": P(None, b_ax, "model", None, None), "v": P(None, b_ax, "model", None, None)}
+        out_spec = (P(b_ax, None, None), cross_spec)
+        args = (p_sds, {"src_embeds": b_sds["src_embeds"]})
+        in_sh = (_ns(mesh, p_spec), _ns(mesh, {"src_embeds": b_spec["src_embeds"]}))
+        return StepBundle(
+            name=f"prefill:{cfg.name}:{shape.name}",
+            fn=prefill_step,
+            args_sds=args,
+            in_shardings=in_sh,
+            out_shardings=_ns(mesh, out_spec),
+            donate_argnums=(),
+            meta=dict(kind="prefill"),
+        )
+
+    def prefill_step(params, batch):
+        logits, cache, _ = model.apply(
+            params, batch["tokens"], parallel=parallel, kv_spec=None,
+            remat=knobs.remat, return_cache=True, use_kernels=knobs.use_kernels,
+            scan_unroll=knobs.scan_unroll,
+        )
+        return logits[:, -1], cache
+
+    cache_sds = jax.eval_shape(
+        lambda p, b: prefill_step(p, b)[1], p_sds, b_sds
+    )
+    c_spec = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _prefill_cache_spec(path, leaf, b_ax),
+        cache_sds,
+    )
+    out_spec = (P(b_ax, None), c_spec)
+    batch_in = {"tokens": b_sds["tokens"]}
+    batch_sp = {"tokens": b_spec["tokens"]}
+    return StepBundle(
+        name=f"prefill:{cfg.name}:{shape.name}",
+        fn=prefill_step,
+        args_sds=(p_sds, batch_in),
+        in_shardings=(_ns(mesh, p_spec), _ns(mesh, batch_sp)),
+        out_shardings=_ns(mesh, out_spec),
+        donate_argnums=(),
+        meta=dict(kind="prefill"),
+    )
+
+
+def _prefill_cache_spec(path, leaf, b_ax):
+    from repro.sharding.rules import _key_of
+
+    key = _key_of(path)
+    nd = len(leaf.shape)
+    if key in ("k", "v") and nd == 5:  # (n, B, S, Hkv, hd)
+        return P(None, b_ax, "model", None, None)
+    if key == "ssm" and nd == 5:
+        return P(None, b_ax, None, None, None)
+    if key == "conv" and nd == 4:
+        return P(None, b_ax, None, None)
+    return P(*((None,) * nd))
+
+
+def _prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ----------------------------------------------------------------------
+# decode / serve
+# ----------------------------------------------------------------------
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh, knobs: Knobs) -> StepBundle:
+    model = build_model(cfg)
+    parallel = make_parallel(mesh, shape.global_batch)
+    c_spec = cache_specs(cfg, shape, mesh)
+    kv_leaf_spec = _decode_kv_spec(c_spec)
+    param_mode = "serve" if knobs.serve_params == "replicated" else "train"
+
+    def serve_step(params, token, cache, pos):
+        logits, new_cache = model.decode_step(
+            params, token, cache, pos, parallel=parallel, kv_spec=kv_leaf_spec,
+            scan_unroll=knobs.scan_unroll,
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    p_sds = _params_sds(model, cfg, knobs.param_dtype)
+    p_spec = param_specs(p_sds, cfg, mesh, mode=param_mode)
+    specs = model.input_specs(shape)
+    b_spec = batch_specs(cfg, shape, mesh)
+
+    return StepBundle(
+        name=f"decode:{cfg.name}:{shape.name}",
+        fn=serve_step,
+        args_sds=(p_sds, specs["token"], specs["cache"], specs["pos"]),
+        in_shardings=(
+            _ns(mesh, p_spec),
+            _ns(mesh, b_spec["token"]),
+            _ns(mesh, b_spec["cache"]),
+            _ns(mesh, b_spec["pos"]),
+        ),
+        out_shardings=(_ns(mesh, b_spec["token"]), _ns(mesh, b_spec["cache"])),
+        donate_argnums=(2,),  # donate the cache
+        meta=dict(kind="decode"),
+    )
+
+
+def _decode_kv_spec(cache_spec_tree) -> Optional[P]:
+    """The per-slot (B, S, Hkv, hd) spec the layer's cache-write constraint
+    uses — the stacked spec minus the leading periods axis."""
+    leaves = jax.tree_util.tree_leaves(
+        cache_spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    for s in leaves:
+        if isinstance(s, P) and len(s) == 5:
+            return P(*s[1:])
+    return None
+
+
+# ----------------------------------------------------------------------
+# dispatch
+# ----------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, knobs: Knobs) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, knobs)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, knobs)
+    if shape.kind == "decode":
+        return build_serve_step(cfg, shape, mesh, knobs)
+    raise ValueError(shape.kind)

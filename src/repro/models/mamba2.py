@@ -1,0 +1,242 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Train/prefill path: chunked SSD scan (quadratic-in-chunk, linear across
+chunks) in pure jnp — the oracle mirrored by ``repro.kernels.ssd_scan``.
+Decode path: O(1) recurrent state update.
+
+Shapes (single group, G=1, as in the released mamba2 configs):
+  x_in   (B, S, D)
+  z,x    (B, S, d_inner)            d_inner = expand * D
+  B,C    (B, S, N)                  N = ssm_state
+  dt     (B, S, H)                  H = d_inner / head_dim
+  state  (B, H, P, N)               P = head_dim
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParallelContext, dense_init, shard
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    k = cfg.ssm_conv
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(rng, 5)
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(  # softplus-inverse of dt in [1e-3, 1e-1]
+        jax.random.uniform(ks[3], (H,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))
+    )))
+    return {
+        # in_proj packs [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], (D, 2 * d_inner + 2 * N + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (k, conv_ch), in_axis_size=k, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),  # (H,)
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, D), in_axis_size=d_inner, dtype=dtype),
+        "norm_z": jnp.zeros((d_inner,), dtype),  # gated RMSNorm scale (-1 offset)
+    }
+
+
+def _split_proj(h, cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    z = h[..., :d_inner]
+    xBC = h[..., d_inner : 2 * d_inner + 2 * N]
+    dt = h[..., 2 * d_inner + 2 * N :]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, kernel k.  xBC: (B,S,C); conv_w: (k,C).
+
+    If conv_state (B, k-1, C) is given (decode), prepend it; returns
+    (out (B,S,C), new_conv_state)."""
+    k = conv_w.shape[0]
+    if conv_state is not None:
+        xfull = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    else:
+        xfull = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = jnp.zeros_like(xBC)
+    for i in range(k):  # k is tiny (4); unrolled taps
+        out = out + xfull[:, i : i + S, :] * conv_w[i][None, None].astype(xBC.dtype)
+    out = out + conv_b[None, None].astype(xBC.dtype)
+    new_state = xfull[:, -(k - 1):, :]  # last (k-1) raw inputs
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x  (B,S,H,P)   inputs per head
+    dt (B,S,H)     positive step sizes (already softplus'd)
+    A  (H,)        negative decay rates (A = -exp(A_log))
+    Bm (B,S,N)     input->state projection (shared across heads, G=1)
+    Cm (B,S,N)     state->output projection
+    returns y (B,S,H,P), final_state (B,H,P,N)
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = chunk
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    xc = x.reshape(Bsz, nc, L, H, Pd)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,L,H) negative
+    dAcs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (masked quadratic) ----
+    # decay(i,j) = exp(dAcs[i] - dAcs[j]) for i >= j  (note: uses inclusive
+    # cumsum on both sides => decay over steps j+1..i, and input enters with
+    # dt_j * B_j at step j)
+    seg = dAcs[:, :, :, None, :] - dAcs[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)  # (B,nc,L,L,H)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    scores = CB[..., None] * Lmat  # (B,nc,i,j,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (B,nc,L,H,P)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dAcs[:, :, -1:, :] - dAcs)  # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc.astype(jnp.float32), decay_to_end * dtc, xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dAcs[:, :, -1, :])  # (B,nc,H)
+
+    def step(carry, inp):
+        st_in = carry  # (B,H,P,N)
+        st_chunk, dec = inp  # (B,H,P,N), (B,H)
+        out = st_in  # state entering this chunk
+        new = st_chunk + dec[:, :, None, None] * st_in
+        return new, out
+
+    final_state, state_in = jax.lax.scan(
+        step,
+        jnp.zeros((Bsz, H, Pd, N), jnp.float32),
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    state_in = state_in.swapaxes(0, 1)  # (B,nc,H,P,N) state at chunk start
+
+    # ---- off-diagonal contribution ----
+    in_decay = jnp.exp(dAcs)  # decay from chunk start to position i
+    y_off = jnp.einsum("bcin,bchpn->bcihp", Cc.astype(jnp.float32), state_in) * in_decay[..., None]
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, Pd)
+    return y[:, :S].astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One recurrent step.  state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    B_t,C_t (B,N).  Returns (y_t (B,H,P), new_state)."""
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])  # (B,H)
+    inp = (dt_t[..., None].astype(jnp.float32) * x_t.astype(jnp.float32))[..., None] * B_t[:, None, None, :].astype(jnp.float32)
+    new_state = dA[..., None, None] * state + inp  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y, new_state
+
+
+def mamba2_block(
+    params: Dict[str, Any],
+    x,
+    *,
+    cfg: ModelConfig,
+    state: Optional[Dict[str, Any]] = None,  # decode: {"ssm": (B,H,P,N), "conv": (B,k-1,C)}
+    parallel: Optional[ParallelContext] = None,
+    use_kernel: bool = False,
+    return_state: bool = False,  # prefill: emit the final recurrent state
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """Returns (out (B,S,D), new_state or None)."""
+    Bsz, S, D = x.shape
+    d_inner = cfg.ssm_expand * D
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    h = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    if parallel is not None:
+        h = shard(h, P(parallel.data_axes, None, parallel.model_axis), parallel)
+    z, xBC, dt = _split_proj(h, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    if state is None:
+        xBC_raw = xBC
+        xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xs = xBC[..., :d_inner].reshape(Bsz, S, H, Pd)
+        Bm = xBC[..., d_inner : d_inner + N]
+        Cm = xBC[..., d_inner + N :]
+        if parallel is not None:
+            # heads → model axis: the SSD intra-chunk (L,L,H) tensors are the
+            # memory hot spot; head-sharding bounds them per chip
+            xs = shard(xs, P(parallel.data_axes, None, parallel.model_axis, None), parallel)
+            dt = shard(dt, P(parallel.data_axes, None, parallel.model_axis), parallel)
+        if use_kernel:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+
+            y, final_state = ssd_ops.ssd(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        else:
+            y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        new_state = None
+        if return_state:
+            k = cfg.ssm_conv
+            # conv state = last (k-1) RAW xBC inputs (pre-activation), padded
+            # on the left when the prefill segment is shorter than k-1
+            tail = xBC_raw[:, max(0, S - (k - 1)) :]
+            if tail.shape[1] < k - 1:
+                tail = jnp.pad(tail, ((0, 0), (k - 1 - tail.shape[1], 0), (0, 0)))
+            new_state = {"ssm": final_state, "conv": tail}
+    else:
+        xBC, conv_state = _causal_conv(
+            xBC, params["conv_w"], params["conv_b"], conv_state=state["conv"]
+        )
+        xs = xBC[..., :d_inner].reshape(Bsz, S, H, Pd)
+        Bm = xBC[..., d_inner : d_inner + N]
+        Cm = xBC[..., d_inner + N :]
+        # S == 1 in decode
+        y, ssm_state = ssd_decode_step(
+            state["ssm"], xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0]
+        )
+        y = y[:, None]  # (B,1,H,P)
+        new_state = {"ssm": ssm_state, "conv": conv_state}
+
+    y = y.astype(x.dtype) + params["D_skip"][None, None, :, None].astype(x.dtype) * xs
+    y = y.reshape(Bsz, S, d_inner)
+    # gated RMSNorm (mamba2 uses norm(y * silu(z)))
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", g, params["w_out"].astype(x.dtype))
+    if parallel is not None:
+        out = shard(out, P(parallel.data_axes, None, None), parallel)
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, Any]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

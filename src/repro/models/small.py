@@ -1,0 +1,118 @@
+"""Small classifiers for the federated reproduction (paper §6.1 scaled).
+
+The paper trains ResNet-18 with GroupNorm on CIFAR.  At container scale we
+use (a) an MLP over synthetic feature vectors and (b) a small CNN with
+GroupNorm (the paper's BN→GN substitution matters for federated averaging —
+BN running stats break under client averaging, GN is stateless) over
+synthetic images.  Both are pure-functional (init/apply) and are consumed by
+the round engine through ``classification_loss``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class SmallModel(NamedTuple):
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], jax.Array]  # (params, x) -> logits
+
+
+def mlp_classifier(dims: Sequence[int]) -> SmallModel:
+    """dims = (in, hidden..., n_classes)."""
+
+    def init(rng):
+        ks = jax.random.split(rng, len(dims) - 1)
+        return [
+            {
+                "w": dense_init(ks[i], (dims[i], dims[i + 1])),
+                "b": jnp.zeros((dims[i + 1],), jnp.float32),
+            }
+            for i in range(len(dims) - 1)
+        ]
+
+    def apply(params, x):
+        h = x
+        for i, layer in enumerate(params):
+            h = h @ layer["w"] + layer["b"]
+            if i < len(params) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return SmallModel(init, apply)
+
+
+def _group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    """x: (B, H, W, C) NHWC."""
+    B, H, W, C = x.shape
+    g = x.reshape(B, H, W, groups, C // groups).astype(jnp.float32)
+    mean = g.mean(axis=(1, 2, 4), keepdims=True)
+    var = g.var(axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    out = g.reshape(B, H, W, C) * scale + bias
+    return out.astype(x.dtype)
+
+
+def cnn_classifier(
+    channels: Sequence[int] = (32, 64),
+    n_classes: int = 10,
+    in_channels: int = 3,
+    gn_groups: int = 8,
+    hw: int = 8,
+) -> SmallModel:
+    """Conv(3x3)→GN→ReLU ×len(channels) with stride-2 downsampling, then FC.
+
+    GroupNorm instead of BatchNorm per the paper (Hsieh+20 BN pathology in
+    federated settings).
+    """
+
+    def init(rng):
+        ks = jax.random.split(rng, len(channels) + 1)
+        params: Dict[str, Any] = {}
+        c_in = in_channels
+        for i, c_out in enumerate(channels):
+            fan_in = 3 * 3 * c_in
+            params[f"conv{i}"] = {
+                "w": dense_init(ks[i], (3, 3, c_in, c_out), in_axis_size=fan_in),
+                "gn_scale": jnp.ones((c_out,), jnp.float32),
+                "gn_bias": jnp.zeros((c_out,), jnp.float32),
+            }
+            c_in = c_out
+        final_hw = hw // (2 ** len(channels))
+        flat = max(final_hw, 1) ** 2 * c_in
+        params["fc"] = {
+            "w": dense_init(ks[-1], (flat, n_classes)),
+            "b": jnp.zeros((n_classes,), jnp.float32),
+        }
+        return params
+
+    def apply(params, x):
+        h = x  # NHWC
+        for i in range(len(channels)):
+            p = params[f"conv{i}"]
+            h = jax.lax.conv_general_dilated(
+                h, p["w"], window_strides=(2, 2), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = _group_norm(h, p["gn_scale"], p["gn_bias"], gn_groups)
+            h = jax.nn.relu(h)
+        h = h.reshape(h.shape[0], -1)
+        return h @ params["fc"]["w"] + params["fc"]["b"]
+
+    return SmallModel(init, apply)
+
+
+def classification_loss(apply_fn) -> Callable[[Any, Dict[str, jax.Array]], jax.Array]:
+    """Mean softmax cross-entropy; batch = {"x": (B, …), "y": (B,) int}."""
+
+    def loss(params, batch):
+        logits = apply_fn(params, batch["x"]).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    return loss

@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "momentum",
+    "sgd",
+    "warmup_cosine",
+]

@@ -1,0 +1,181 @@
+"""Minimal functional optimizer library (optax is not installed offline).
+
+An ``Optimizer`` is a pair of pure functions:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    new_params = tree_add(params, updates)        # updates already contain -lr
+
+Used for (a) the centralized training driver (AdamW), (b) server optimizers
+in federated algorithms (SGD / momentum / Adam for FedAdam), (c) client
+local SGD.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr) -> Optimizer:
+    """lr may be a float or a schedule fn step->lr; state = step count."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jnp.zeros([], jnp.int32)
+
+    def update(grads, state, params=None):
+        step_lr = sched(state)
+        updates = jax.tree_util.tree_map(lambda g: -step_lr * g, grads)
+        return updates, state + 1
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return (jnp.zeros([], jnp.int32), jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        step, mu = state
+        mu = jax.tree_util.tree_map(lambda m, g: beta * m + g, mu, grads)
+        if nesterov:
+            eff = jax.tree_util.tree_map(lambda m, g: beta * m + g, mu, grads)
+        else:
+            eff = mu
+        step_lr = sched(step)
+        updates = jax.tree_util.tree_map(lambda e: -step_lr * e, eff)
+        return updates, (step + 1, mu)
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    eps_root: float = 0.0,
+    bias_correction: bool = True,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """``moment_dtype``: f32 default; bf16 halves optimizer HBM for the
+    largest archs (llama4-class) — the update math still runs in f32."""
+    sched = _as_schedule(lr)
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+        return (jnp.zeros([], jnp.int32), z, jax.tree_util.tree_map(jnp.copy, z))
+
+    def update(grads, state, params=None):
+        step, m, v = state
+        m = jax.tree_util.tree_map(
+            lambda mi, g: (b1 * mi.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(mdt),
+            m, grads,
+        )
+        v = jax.tree_util.tree_map(
+            lambda vi, g: (b2 * vi.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(mdt),
+            v, grads,
+        )
+        step1 = step + 1
+        if bias_correction:
+            c1 = 1.0 - b1 ** step1.astype(jnp.float32)
+            c2 = 1.0 - b2 ** step1.astype(jnp.float32)
+        else:
+            c1 = c2 = jnp.float32(1.0)
+        step_lr = sched(step)
+
+        def upd(mi, vi):
+            mhat = mi / c1
+            vhat = vi / c2
+            return -step_lr * mhat / (jnp.sqrt(vhat + eps_root) + eps)
+
+        updates = jax.tree_util.tree_map(upd, m, v)
+        return updates, (step1, m, v)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mask: Optional[Callable[[Any], Any]] = None,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with decoupled weight decay. ``mask(params)`` -> pytree of bools
+    selecting which leaves are decayed (default: every leaf with ndim >= 2)."""
+    base = adam(lr, b1=b1, b2=b2, eps=eps, moment_dtype=moment_dtype)
+    sched = _as_schedule(lr)
+
+    def default_mask(params):
+        return jax.tree_util.tree_map(lambda p: p.ndim >= 2, params)
+
+    mask_fn = mask or default_mask
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params):
+        step = state[0]
+        updates, state = base.update(grads, state, params)
+        step_lr = sched(step)
+        decay_mask = mask_fn(params)
+        updates = jax.tree_util.tree_map(
+            lambda u, p, m: u - step_lr * weight_decay * p.astype(u.dtype) * jnp.asarray(m),
+            updates,
+            params,
+            decay_mask,
+        )
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, pre_clip_norm)."""
+    gnorm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*peak."""
+
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def exponential_decay(base_lr: float, decay: float):
+    """Paper appendix C.2: eta_l decayed exponentially per round."""
+
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        return base_lr * decay**step
+
+    return sched
+
+
+def _as_schedule(lr):
+    if callable(lr):
+        return lr
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    batch_specs,
+    cache_specs,
+    fed_state_specs,
+    named,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_specs",
+    "fed_state_specs",
+    "named",
+    "opt_state_specs",
+    "param_specs",
+]

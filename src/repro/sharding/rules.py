@@ -1,0 +1,250 @@
+"""Logical-axis sharding rules → PartitionSpec trees (DESIGN.md §5).
+
+One function per pytree kind.  Rules are *path-based*: the leaf's dict-key
+name (``wq``, ``w_down``, ``embed`` …) plus its rank decide the spec — layer
+stacks add a leading ``periods`` axis which is always unsharded (it is the
+scan axis).
+
+Mesh axes:
+  ``fsdp``  = the (pod?, data) axes — batch / cohort parallel AND the
+              parameter-storage (ZeRO-3) axes; XLA inserts the per-layer
+              all-gathers.
+  ``model`` = tensor-parallel axis (attention heads, MLP hidden, experts,
+              vocab).
+
+The same rules serve: params, grads (same specs), AdamW moments (same
+specs), FedCM server momentum Δ_t (same specs — it is a params-shaped
+pytree!), and cohort-stacked client params (extra leading cohort axis →
+fsdp).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+
+def _axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (fsdp_axes, model_axis) for a production mesh."""
+    names = mesh.axis_names
+    model = "model" if "model" in names else names[-1]
+    fsdp = tuple(n for n in names if n != model)
+    return fsdp, model
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _key_of(path) -> str:
+    """Last dict key in a tree path."""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(e, "key", getattr(e, "name", getattr(e, "idx", "?")))) for e in path
+    )
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh, mode: str = "train") -> Any:
+    """PartitionSpec tree matching ``jax.eval_shape(model.init, rng)``.
+
+    ``mode="train"``: FSDP storage — every large leaf additionally sharded
+    over the (pod, data) axes; XLA all-gathers per layer on use.
+    ``mode="serve"``: decode amortizes nothing over a 1-token step, so the
+    per-layer FSDP all-gathers DOMINATE the decode collective term (§Perf
+    hillclimb B) — serve mode replicates non-expert weights across the data
+    axes (tensor-parallel only), keeping FSDP only for MoE expert banks
+    (whose replicated copies would not fit HBM).
+
+    Divisibility guard: a dim is only sharded if the axis size divides it —
+    otherwise that dim falls back to replicated (correct, just less
+    distributed; the dry-run table records the per-arch outcome).
+    """
+    fsdp, model = _axes(mesh)
+    serve = mode == "serve"
+    fsdp_size = 1
+    for a in fsdp:
+        fsdp_size *= mesh.shape[a]
+    model_size = mesh.shape[model]
+
+    def ok(dim: int, size: int) -> bool:
+        return dim % size == 0 and dim >= size
+
+    def spec_for(path, leaf) -> P:
+        key = _key_of(path)
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+
+        def lead(n_used: int) -> Tuple[Optional[str], ...]:
+            """None-padding for leading stack axes (periods / enc-dec layer)."""
+            return (None,) * (nd - n_used)
+
+        def f(dim_idx: int):
+            # serve mode: replicate over fsdp except inside MoE expert banks
+            if serve and "moe" not in pstr:
+                return None
+            return fsdp if ok(shape[dim_idx], fsdp_size) else None
+
+        def m(dim_idx: int):
+            return model if ok(shape[dim_idx], model_size) else None
+
+        if key == "embed":  # (V, D) — V→model, D→fsdp
+            return P(m(0), f(1))
+        if key == "unembed":  # (D, V)
+            return P(f(0), m(1))
+        if key in ("wq", "wk", "wv"):  # (…, D, H|Hkv, hd)
+            return P(*lead(3), f(nd - 3), m(nd - 2), None)
+        if key == "wo":  # (…, H, hd, D)
+            return P(*lead(3), m(nd - 3), None, f(nd - 1))
+        if key == "router":  # (…, D, E) — replicated router (small, f32)
+            return P(*lead(2), f(nd - 2), None)
+        if key in ("w_gate", "w_up"):
+            if "moe" in pstr:  # (…, E, D, F): experts→model, D→fsdp
+                return P(*lead(3), m(nd - 3), f(nd - 2), None)
+            return P(*lead(2), f(nd - 2), m(nd - 1))  # (…, D, F)
+        if key == "w_down":
+            if "moe" in pstr:  # (…, E, F, D)
+                return P(*lead(3), m(nd - 3), None, f(nd - 1))
+            return P(*lead(2), m(nd - 2), f(nd - 1))  # (…, F, D)
+        if key == "w_in":  # mamba (…, D, zxbcdt)
+            return P(*lead(2), f(nd - 2), m(nd - 1))
+        if key == "w_out":  # mamba (…, d_inner, D)
+            return P(*lead(2), m(nd - 2), f(nd - 1))
+        if key == "conv_w":  # (…, k, conv_ch)
+            return P(*lead(2), None, m(nd - 1))
+        if key in ("conv_b", "norm_z"):  # (…, conv_ch)/(…, d_inner)
+            return P(*lead(1), m(nd - 1))
+        # norms, biases, A_log, D_skip, dt_bias, gn_*, fc, small-model leaves
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def opt_state_specs(opt_state_shape: Any, params_specs: Any) -> Any:
+    """AdamW state = (step, m, v); moments share the param specs."""
+    step_spec, m_spec, v_spec = P(), params_specs, params_specs
+    return (step_spec, m_spec, v_spec)
+
+
+# ----------------------------------------------------------------------
+# batches / inputs
+# ----------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Any:
+    """Specs matching ``model.input_specs(shape)``."""
+    fsdp, model = _axes(mesh)
+    fsdp_size = 1
+    for a in fsdp:
+        fsdp_size *= mesh.shape[a]
+    B = shape.global_batch
+    b_ax = fsdp if B % fsdp_size == 0 else None
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            return {
+                "src_embeds": P(b_ax, None, None),
+                "tgt_tokens": P(b_ax, None),
+                "labels": P(b_ax, None),
+            }
+        return {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+
+    # decode: token + cache + pos
+    return {
+        "token": P(b_ax, None),
+        "cache": cache_specs(cfg, shape, mesh),
+        "pos": P(),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Any:
+    """KV / SSM cache specs (DESIGN.md §5).
+
+    B > 1 : batch→fsdp, sequence→model   (heads are often < model size)
+    B = 1 : sequence→(fsdp+model) — the long_500k layout; each chip owns a
+            contiguous S/256 slab of every layer's cache.
+    """
+    fsdp, model = _axes(mesh)
+    fsdp_size = 1
+    for a in fsdp:
+        fsdp_size *= mesh.shape[a]
+    B, S = shape.global_batch, shape.seq_len
+    if B % fsdp_size == 0:
+        # (n_periods, B, S, Hkv, hd): B→fsdp, S→model
+        kv_spec = P(None, fsdp, model, None, None)
+        ssm_spec = P(None, fsdp, None, None, None)  # (n, B, H, P, N)
+        conv_spec = P(None, fsdp, None, None)  # (n, B, k-1, C)
+        b_ax: Any = fsdp
+    else:
+        seq_axes = tuple(a for a in (*fsdp, model))
+        kv_spec = P(None, None, seq_axes, None, None)  # S→(fsdp, model)
+        ssm_spec = P(None, None, model, None, None)  # H→model
+        conv_spec = P(None, None, None, model)
+        b_ax = None
+
+    def spec_for(path, leaf):
+        key = _key_of(path)
+        nd = len(leaf.shape)
+        if key in ("k", "v"):
+            if nd == 5:
+                return kv_spec
+            return P(*kv_spec[1:]) if nd == 4 else P(*((None,) * nd))
+        if key in ("cross_k", "cross_v"):  # (L, B, S_src, Hkv, hd)
+            return kv_spec
+        if key == "ssm":
+            return ssm_spec if nd == 5 else P(*ssm_spec[1:])
+        if key == "conv":
+            return conv_spec if nd == 4 else P(*conv_spec[1:])
+        return P(*((None,) * nd))
+
+    cache_shape = _cache_shape(cfg, shape)
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def _cache_shape(cfg: ModelConfig, shape: ShapeConfig):
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+    return specs["cache"]
+
+
+# ----------------------------------------------------------------------
+# federated state
+# ----------------------------------------------------------------------
+
+
+def fed_state_specs(params_specs: Any, cfg_fed, mesh) -> Any:
+    """Specs for FedState: params + ServerState(momentum, second_moment) are
+    params-shaped; stacked client states get a leading fsdp cohort axis."""
+    fsdp, _ = _axes(mesh)
+
+    def stack(spec: P) -> P:
+        return P(fsdp, *spec)
+
+    server = dict(momentum=params_specs, second_moment=params_specs, round=P())
+    client_states = jax.tree_util.tree_map(stack, params_specs) if cfg_fed.algo in (
+        "scaffold", "feddyn") else None
+    return dict(params=params_specs, server=server, client_states=client_states, rng=P())

@@ -1,0 +1,73 @@
+"""Pytree arithmetic helpers.
+
+All federated algorithms in ``repro.core`` are expressed as pytree algebra
+(model deltas, momenta, control variates).  These helpers keep that algebra
+readable and are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """a + b, leafwise."""
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """a - b, leafwise."""
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """s * a for scalar s, leafwise."""
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise (BLAS axpy)."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_lerp(a, b, t):
+    """(1 - t) * a + t * b, leafwise."""
+    return jax.tree_util.tree_map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across all leaves (f32 accumulate)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    """Global l2 norm across all leaves."""
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar elements."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a) -> int:
+    """Total bytes across leaves."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a, dtype):
+    """Cast every floating leaf to ``dtype`` (ints left alone)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, a)

@@ -1,0 +1,70 @@
+"""Checkpoint roundtrip incl. bf16 and structure mismatch errors."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import latest_step, load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "params": {
+            "w": jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)), jnp.float32),
+            "b16": jnp.asarray(np.random.default_rng(1).normal(size=(8,)), jnp.bfloat16),
+        },
+        "opt": (jnp.int32(7), [jnp.zeros((2,), jnp.float32)]),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 42, t, meta={"note": "x"})
+    restored, meta = load_checkpoint(str(tmp_path), 42, t)
+    assert meta["step"] == 42 and meta["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_latest_step(tmp_path):
+    t = _tree()
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 30, t)
+    save_checkpoint(str(tmp_path), 7, t)
+    assert latest_step(str(tmp_path)) == 30
+    restored, meta = load_checkpoint(str(tmp_path), None, t)
+    assert meta["step"] == 30
+
+
+def test_missing_leaf_raises(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 0, {"params": t["params"]})
+    with pytest.raises(KeyError):
+        load_checkpoint(str(tmp_path), 0, t)
+
+
+def test_fed_state_roundtrip(tmp_path):
+    """FedState (params + momentum + client states) persists across rounds —
+    a server crash must not lose Δ_t."""
+    from repro.configs.base import FedConfig
+    from repro.core import FederatedEngine
+    from repro.data import FederatedData, make_synthetic_classification
+    from repro.models.small import classification_loss, mlp_classifier
+
+    x, y, *_ = make_synthetic_classification(n_classes=4, dim=8, n_train=400, n_test=8)
+    model = mlp_classifier((8, 16, 4))
+    cfg = FedConfig(algo="fedcm", num_clients=8, cohort_size=3, local_steps=2)
+    eng = FederatedEngine(cfg, classification_loss(model.apply), batch_size=8)
+    data = FederatedData(x, y, 8, seed=0)
+    st = eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    st, _ = eng.run_round(st, data)
+    tree = {"params": st.params, "momentum": st.server.momentum}
+    save_checkpoint(str(tmp_path), 1, tree)
+    restored, _ = load_checkpoint(str(tmp_path), 1, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,45 @@
+"""Integration: the multi-pod dry-run actually lowers + compiles.
+
+Run as a subprocess because XLA_FLAGS (512 placeholder devices) must be set
+before jax initializes — the in-process test session already owns a
+1-device jax.  One cheap pair per mesh keeps CI time sane; the full 40-pair
+sweep is `python -m repro.launch.dryrun --all --both-meshes` (EXPERIMENTS.md
+§Dry-run records its output).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run_dryrun(*args):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=900, env=env, cwd=str(REPO),
+    )
+
+
+@pytest.mark.slow
+def test_single_pod_decode_lowers():
+    r = _run_dryrun("--arch", "llama3.2-1b", "--shape", "decode_32k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL DRY-RUNS PASSED" in r.stdout
+
+
+@pytest.mark.slow
+def test_multi_pod_train_lowers():
+    r = _run_dryrun("--arch", "llama3.2-1b", "--shape", "train_4k", "--multi-pod")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL DRY-RUNS PASSED" in r.stdout
+    art = REPO / "benchmarks" / "artifacts" / "dryrun" / "llama3.2-1b_train_4k_multi_pod_2x16x16.json"
+    assert art.exists()
+    data = json.loads(art.read_text())
+    assert data["chips"] == 512
+    assert data["hlo_flops_per_device"] > 0
+    assert data["collective_bytes_per_device"] > 0

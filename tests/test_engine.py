@@ -1,0 +1,130 @@
+"""Round-engine semantics: cohort sampling, state staleness, schedules."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import (
+    FederatedEngine,
+    cohort_capacity,
+    local_learning_rate,
+    sample_cohort,
+)
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+
+def test_fixed_cohort_exact_size_no_repeats():
+    cfg = FedConfig(num_clients=50, cohort_size=10, participation="fixed")
+    for s in range(20):
+        ids, mask = sample_cohort(jax.random.PRNGKey(s), cfg)
+        assert ids.shape == (10,)
+        assert bool(mask.all())
+        assert len(np.unique(np.asarray(ids))) == 10
+
+
+def test_bernoulli_cohort_statistics():
+    """Active count over many rounds ≈ Binomial(N, S/N) mean ± tolerance."""
+    cfg = FedConfig(num_clients=200, cohort_size=10, participation="bernoulli")
+    cap = cohort_capacity(cfg)
+    assert cap >= 10
+    counts = []
+    for s in range(300):
+        ids, mask = sample_cohort(jax.random.PRNGKey(s), cfg)
+        assert ids.shape == (cap,)
+        counts.append(int(mask.sum()))
+        assert len(np.unique(np.asarray(ids))) == cap  # ids w/o replacement
+    mean = np.mean(counts)
+    assert abs(mean - 10) < 1.0, mean  # E = N·p = 10
+    assert np.std(counts) > 1.0  # genuinely random (σ ≈ 3.1)
+
+
+def test_eta_l_decay_schedule():
+    cfg = FedConfig(eta_l=0.1, eta_l_decay=0.998)
+    for t in [0, 1, 50]:
+        np.testing.assert_allclose(
+            float(local_learning_rate(cfg, jnp.int32(t))), 0.1 * 0.998**t, rtol=1e-5
+        )
+
+
+def _fed_setup(algo, **kw):
+    x, y, *_ = make_synthetic_classification(n_classes=4, dim=8, n_train=800, n_test=8)
+    model = mlp_classifier((8, 16, 4))
+    base = dict(algo=algo, num_clients=10, cohort_size=3, local_steps=2,
+                participation="fixed")
+    base.update(kw)
+    cfg = FedConfig(**base)
+    eng = FederatedEngine(cfg, classification_loss(model.apply), batch_size=8)
+    data = FederatedData(x, y, cfg.num_clients, seed=0)
+    state = eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    return cfg, eng, data, state
+
+
+def test_scaffold_state_staleness():
+    """Non-participating clients' control variates must NOT move — this is
+    the staleness mechanism the paper blames for SCAFFOLD's 2%-participation
+    degradation."""
+    cfg, eng, data, state = _fed_setup("scaffold")
+    rng, kc, kb = jax.random.split(state.rng, 3)
+    ids, mask = sample_cohort(kc, cfg)
+    batches = data.sample_round_batches(kb, ids, cfg.local_steps, 8)
+    new, _ = eng.round_step(state._replace(rng=rng), batches, ids, mask)
+    active = set(np.asarray(ids).tolist())
+    old_c = jax.tree_util.tree_leaves(state.client_states)[0]
+    new_c = jax.tree_util.tree_leaves(new.client_states)[0]
+    for cid in range(cfg.num_clients):
+        moved = float(jnp.max(jnp.abs(new_c[cid] - old_c[cid]))) > 0
+        assert moved == (cid in active), cid
+
+
+def test_bernoulli_mask_excludes_inactive_from_aggregate():
+    """An inactive cohort slot must contribute nothing: running the same
+    round with the inactive client's batches replaced by garbage must give
+    identical parameters."""
+    cfg, eng, data, state = _fed_setup("fedcm", participation="bernoulli",
+                                       num_clients=10, cohort_size=3)
+    rng, kc, kb = jax.random.split(state.rng, 3)
+    ids, mask = sample_cohort(kc, cfg)
+    mask = mask.at[-1].set(False)  # force at least one inactive slot
+    batches = data.sample_round_batches(kb, ids, cfg.local_steps, 8)
+    out1, _ = eng.round_step(state._replace(rng=rng), batches, ids, mask)
+    garbage = jax.tree_util.tree_map(
+        lambda a: a.at[-1].set(jnp.asarray(3 if jnp.issubdtype(a.dtype, jnp.integer) else 1e3, a.dtype)),
+        batches,
+    )
+    out2, _ = eng.round_step(state._replace(rng=rng), garbage, ids, mask)
+    for a, b in zip(jax.tree_util.tree_leaves(out1.params),
+                    jax.tree_util.tree_leaves(out2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weight_decay_enters_local_gradient():
+    cfg, eng, data, state = _fed_setup("fedavg", weight_decay=0.0)
+    cfg_wd = replace(cfg, weight_decay=0.5)
+    eng_wd = FederatedEngine(cfg_wd, eng.loss_fn, batch_size=8)
+    rng, kc, kb = jax.random.split(state.rng, 3)
+    ids, mask = sample_cohort(kc, cfg)
+    batches = data.sample_round_batches(kb, ids, cfg.local_steps, 8)
+    o1, _ = eng.round_step(state._replace(rng=rng), batches, ids, mask)
+    o2, _ = eng_wd.round_step(state._replace(rng=rng), batches, ids, mask)
+    d = sum(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(o1.params),
+                        jax.tree_util.tree_leaves(o2.params))
+    )
+    assert d > 1e-6
+
+
+def test_round_metrics_fields():
+    cfg, eng, data, state = _fed_setup("fedcm")
+    state, m = eng.run_round(state, data)
+    assert float(m.loss) > 0
+    assert int(m.n_active) == 3
+    assert float(m.eta_l) == pytest.approx(0.1, rel=1e-5)
+    assert float(m.bytes_down) == 2 * float(m.bytes_up)  # fedcm asymmetry

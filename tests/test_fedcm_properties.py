@@ -1,0 +1,168 @@
+"""Property tests of the paper's structural claims (§4.1, Appendix B).
+
+* Lemma 4.1 — Δ_{t+1} = α·Δ̃_t + (1−α)·Δ_t exactly (Δ̃ recomputed by hand).
+* α = 1 degenerates FedCM to FedAvg bit-exactly.
+* Lemma B.7 — the auxiliary sequence obeys z_{t+1} = z_t − η_g_eff·Δ̃_t.
+* Statelessness: FedCM keeps no client state; SCAFFOLD/FedDyn do.
+* Payload asymmetry (§4.2): FedCM doubles downlink only.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine, sample_cohort
+from repro.core.algorithms import client_state_init
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+from repro.utils.trees import tree_norm, tree_sub
+
+
+def _setup(algo="fedcm", alpha=0.3, K=3, clients=8, cohort=3, eta_l=0.05, eta_g=1.0,
+           participation="fixed", wd=0.0, decay=1.0, seed=0):
+    x, y, *_ = make_synthetic_classification(n_classes=4, dim=8, n_train=640, n_test=16, seed=seed)
+    model = mlp_classifier((8, 16, 4))
+    loss_fn = classification_loss(model.apply)
+    cfg = FedConfig(algo=algo, num_clients=clients, cohort_size=cohort, local_steps=K,
+                    alpha=alpha, eta_l=eta_l, eta_g=eta_g, weight_decay=wd,
+                    eta_l_decay=decay, participation=participation)
+    data = FederatedData(x, y, clients, seed=seed)
+    eng = FederatedEngine(cfg, loss_fn, batch_size=16)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, data, eng, params, loss_fn
+
+
+def _manual_delta_tilde(cfg, loss_fn, params, momentum, ids, batches):
+    """Recompute Δ̃_t = (1/KS)·Σ g_{i,k} along the FedCM trajectory."""
+    grads = []
+    for i in range(ids.shape[0]):
+        x = params
+        for k in range(cfg.local_steps):
+            b = jax.tree_util.tree_map(lambda a: a[i, k], batches)
+            g = jax.grad(loss_fn)(x, b)
+            grads.append(g)
+            v = jax.tree_util.tree_map(
+                lambda gi, mi: cfg.alpha * gi + (1 - cfg.alpha) * mi, g, momentum
+            )
+            x = jax.tree_util.tree_map(lambda xi, vi: xi - cfg.eta_l * vi, x, v)
+    return jax.tree_util.tree_map(lambda *gs: jnp.mean(jnp.stack(gs), 0), *grads)
+
+
+@given(
+    alpha=st.sampled_from([0.05, 0.1, 0.3, 0.7, 1.0]),
+    K=st.integers(1, 4),
+    seed=st.integers(0, 5),
+)
+@settings(max_examples=10, deadline=None)
+def test_lemma_4_1_ema(alpha, K, seed):
+    cfg, data, eng, params, loss_fn = _setup(alpha=alpha, K=K, seed=seed)
+    state = eng.init(params, jax.random.PRNGKey(seed + 100))
+    for _ in range(2):  # check the lemma at two rounds (Δ_0 = 0 and Δ_1 ≠ 0)
+        rng, kc, kb = jax.random.split(state.rng, 3)
+        ids, mask = sample_cohort(kc, cfg)
+        batches = data.sample_round_batches(kb, ids, cfg.local_steps, 16)
+        prev = state.server.momentum
+        new_state, _ = eng.round_step(state._replace(rng=rng), batches, ids, mask)
+        tilde = _manual_delta_tilde(cfg, loss_fn, state.params, prev, ids, batches)
+        lemma = jax.tree_util.tree_map(
+            lambda t, pm: cfg.alpha * t + (1 - cfg.alpha) * pm, tilde, prev
+        )
+        err = float(tree_norm(tree_sub(lemma, new_state.server.momentum)))
+        ref = float(tree_norm(new_state.server.momentum)) + 1e-12
+        assert err / ref < 1e-4, (alpha, K, err / ref)
+        state = new_state
+
+
+def test_alpha_1_is_fedavg_bitexact():
+    cfg, data, eng_cm, params, loss_fn = _setup(algo="fedcm", alpha=1.0)
+    cfg_avg = replace(cfg, algo="fedavg")
+    eng_avg = FederatedEngine(cfg_avg, loss_fn, batch_size=16)
+    s_cm = eng_cm.init(params, jax.random.PRNGKey(7))
+    s_avg = eng_avg.init(params, jax.random.PRNGKey(7))
+    for _ in range(4):
+        s_cm, _ = eng_cm.run_round(s_cm, data)
+        s_avg, _ = eng_avg.run_round(s_avg, data)
+    for a, b in zip(jax.tree_util.tree_leaves(s_cm.params),
+                    jax.tree_util.tree_leaves(s_avg.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lemma_b7_z_recursion():
+    """z_{t+1} = z_t − η_g_eff·Δ̃_t with z_t = x_t + (1−α)/α·(x_t − x_{t−1})."""
+    cfg, data, eng, params, loss_fn = _setup(alpha=0.25, K=2)
+    state = eng.init(params, jax.random.PRNGKey(3))
+    xs = [state.params]
+    tildes = []
+    for _ in range(3):
+        rng, kc, kb = jax.random.split(state.rng, 3)
+        ids, mask = sample_cohort(kc, cfg)
+        batches = data.sample_round_batches(kb, ids, cfg.local_steps, 16)
+        tildes.append(_manual_delta_tilde(cfg, loss_fn, state.params,
+                                          state.server.momentum, ids, batches))
+        state, _ = eng.round_step(state._replace(rng=rng), batches, ids, mask)
+        xs.append(state.params)
+
+    a = cfg.alpha
+    eta_eff = cfg.eta_g * cfg.eta_l * cfg.local_steps
+
+    def z(t):
+        if t == 0:
+            return xs[0]
+        return jax.tree_util.tree_map(
+            lambda xt, xp: xt + (1 - a) / a * (xt - xp), xs[t], xs[t - 1]
+        )
+
+    for t in range(2):
+        lhs = z(t + 1)
+        rhs = jax.tree_util.tree_map(lambda zt, d: zt - eta_eff * d, z(t), tildes[t])
+        err = float(tree_norm(tree_sub(lhs, rhs))) / (float(tree_norm(lhs)) + 1e-12)
+        assert err < 1e-4, (t, err)
+
+
+def test_statelessness():
+    cfg, *_ , params, _ = _setup(algo="fedcm")
+    assert client_state_init(params, cfg) is None
+    for algo in ("fedavg", "fedadam", "mimelite"):
+        assert client_state_init(params, replace(cfg, algo=algo)) is None
+    for algo in ("scaffold", "feddyn"):
+        cst = client_state_init(params, replace(cfg, algo=algo))
+        assert cst is not None
+        leaf = jax.tree_util.tree_leaves(cst)[0]
+        assert leaf.shape[0] == cfg.num_clients
+
+
+def test_payload_asymmetry():
+    """§4.2: FedCM costs 2×down / 1×up; SCAFFOLD 2×/2×; FedAvg 1×/1×;
+    MimeLite 2×down (x_t + m) and 2×up (Δ + full-batch grad)."""
+    from repro.utils.trees import tree_bytes
+
+    cfg, data, eng, params, loss_fn = _setup()
+    P = tree_bytes(params)
+    expect = {
+        "fedavg": (P, P),
+        "fedcm": (2 * P, P),
+        "fedadam": (P, P),
+        "scaffold": (2 * P, 2 * P),
+        "feddyn": (P, P),
+        "mimelite": (2 * P, 2 * P),
+    }
+    for algo, (dn, up) in expect.items():
+        e = FederatedEngine(replace(cfg, algo=algo), loss_fn, batch_size=16)
+        pay = e.payload_bytes(params)
+        assert pay["down_per_client"] == dn, algo
+        assert pay["up_per_client"] == up, algo
+
+
+def test_momentum_is_zero_at_init_and_moves():
+    cfg, data, eng, params, _ = _setup()
+    state = eng.init(params, jax.random.PRNGKey(0))
+    assert float(tree_norm(state.server.momentum)) == 0.0
+    state, m = eng.run_round(state, data)
+    assert float(tree_norm(state.server.momentum)) > 0.0
+    assert float(m.momentum_norm) == 0.0  # norm of Δ_t ENTERING round 0

@@ -1,0 +1,170 @@
+"""Kernel sweeps: every Pallas kernel vs its pure-jnp oracle across
+shapes / dtypes (deliverable (c): per-kernel allclose)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedcm_update.ops import fedcm_step, fedcm_step_tree
+from repro.kernels.fedcm_update.ref import fedcm_step_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_sequential_ref
+from repro.models.mamba2 import ssd_chunked
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------------
+# fedcm_update
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(5,), (1023,), (64 * 1024 + 3,), (17, 129), (2, 3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedcm_update_sweep(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    g = jnp.asarray(RNG.normal(size=shape), dtype)
+    d = jnp.asarray(RNG.normal(size=shape), dtype)
+    out = fedcm_step(x, g, d, 0.1, 0.05)
+    ref = fedcm_step_ref(x, g, d, 0.1, 0.05)
+    assert out.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("alpha,eta", [(0.0, 0.1), (1.0, 0.1), (0.1, 0.0), (0.37, 1.3)])
+def test_fedcm_update_hyperparam_edges(alpha, eta):
+    x = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
+    d = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
+    np.testing.assert_allclose(
+        fedcm_step(x, g, d, alpha, eta), fedcm_step_ref(x, g, d, alpha, eta),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_fedcm_update_tree_matches_leafwise():
+    tree = {
+        "a": jnp.asarray(RNG.normal(size=(13, 7)), jnp.float32),
+        "b": [jnp.asarray(RNG.normal(size=(5,)), jnp.float32),
+              jnp.asarray(RNG.normal(size=(2, 3)), jnp.bfloat16)],
+    }
+    g = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), tree)
+    m = jax.tree_util.tree_map(lambda x: 0.5 * jnp.ones_like(x), tree)
+    out = fedcm_step_tree(tree, g, m, 0.2, 0.1)
+    ref = jax.tree_util.tree_map(lambda x, gg, mm: fedcm_step_ref(x, gg, mm, 0.2, 0.1), tree, g, m)
+    for o, r in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(ref)):
+        assert o.dtype == r.dtype
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=2e-2, atol=2e-2
+        )
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Sq, Skv, H, Hkv, hd, causal, window, q_offset)
+    (2, 64, 64, 4, 2, 32, True, None, 0),
+    (1, 100, 100, 4, 4, 16, True, None, 0),     # ragged vs block
+    (1, 128, 128, 2, 1, 32, True, 17, 0),       # sliding window (MQA)
+    (1, 96, 96, 2, 2, 64, False, None, 0),      # bidirectional (encoder)
+    (2, 1, 200, 4, 2, 32, True, None, 199),     # decode: 1 query vs deep KV
+    (1, 257, 257, 8, 2, 128, True, None, 0),    # hd=128 MXU-width
+    (1, 64, 64, 4, 2, 32, True, 1, 0),          # window=1 (self only)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Sq, Skv, H, Hkv, hd, causal, window, off = case
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, q_offset=off, bq=32, bkv=32)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_matches_model_layer_attention():
+    """The kernel must agree with the model's attend_direct (GQA grouping)."""
+    from repro.models.layers import attend_direct
+
+    B, S, H, Hkv, hd = 2, 48, 8, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    pos = jnp.arange(S)
+    msk = (pos[:, None] >= pos[None, :])[None, None]
+    ref = attend_direct(q, k, v, msk, hd**-0.5)
+    out = flash_attention(q, k, v, causal=True, bq=16, bkv=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------------
+# ssd scan
+# ----------------------------------------------------------------------
+
+SSD_CASES = [
+    # (B, S, H, P, N, chunk)
+    (2, 64, 3, 16, 8, 16),
+    (1, 100, 2, 32, 16, 32),   # ragged
+    (1, 37, 1, 8, 4, 16),      # shorter than 2 chunks
+    (1, 128, 4, 64, 32, 64),   # production-ish tile
+    (2, 16, 2, 8, 8, 16),      # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_sequential(case, dtype):
+    B, S, H, P, N, chunk = case
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.normal(size=(H,))) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    y_ker, st_ker = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, st_ref = ssd_sequential_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_ker, np.float32), np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st_ker), np.asarray(st_ref), **tol)
+
+
+def test_ssd_chunk_invariance():
+    """The chunk size is an implementation detail — outputs must not move."""
+    B, S, H, P, N = 1, 96, 2, 16, 8
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.normal(size=(H,))) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    y16, _ = ssd(x, dt, A, Bm, Cm, chunk=16)
+    y48, _ = ssd(x, dt, A, Bm, Cm, chunk=48)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y48), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_vs_model_chunked():
+    """kernel == the model's jnp chunked path (the integration contract)."""
+    B, S, H, P, N, chunk = 2, 80, 2, 16, 8, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.normal(size=(H,))) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    y_k, st_k = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    y_m, st_m = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_m), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,106 @@
+"""Sharding rules: structural checks on CPU (the real lowering is exercised
+by launch/dryrun.py over 512 placeholder devices — subprocess-tested in
+test_dryrun_subprocess.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config, reduced
+from repro.models import build_model
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Shape-only stand-in for a production mesh (no devices needed)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "dbrx-132b", "mamba2-1.3b",
+                                  "zamba2-7b", "seamless-m4t-large-v2", "gemma3-12b"])
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["1pod", "2pod"])
+def test_param_specs_cover_every_leaf_with_matching_rank(arch, mesh):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(sds, cfg, mesh)
+    flat_s, _ = jax.tree_util.tree_flatten(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(sds)
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        # divisibility: every named axis divides its dim
+        for d, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert leaf.shape[d] % size == 0, (arch, spec, leaf.shape, d)
+
+
+def test_big_matrices_are_sharded_not_replicated():
+    """The FSDP story requires every large leaf to actually shard."""
+    cfg = get_config("qwen3-14b")
+    model = build_model(cfg)
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(sds, cfg, MESH)
+    flat = jax.tree_util.tree_flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    sizes = {tuple(str(getattr(e, "key", e)) for e in path): s for path, s in flat}
+    leaves = {tuple(str(getattr(e, "key", e)) for e in path): l
+              for path, l in jax.tree_util.tree_flatten_with_path(sds)[0]}
+    for path, leaf in leaves.items():
+        if leaf.size >= (1 << 22):  # ≥ 4M params ⇒ must shard
+            spec = sizes[path]
+            assert any(e is not None for e in spec), (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_batch_specs_match_input_specs_structure(shape_name):
+    cfg = get_config("llama3.2-1b")
+    model = build_model(cfg)
+    shape = SHAPES[shape_name]
+    ins = model.input_specs(shape)
+    specs = batch_specs(cfg, shape, MESH)
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, ins)
+    ) == jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, specs, is_leaf=lambda x: isinstance(x, P))
+    )
+
+
+def test_long500k_cache_shards_sequence():
+    """B=1 ⇒ cache sequence dim carries BOTH data and model axes."""
+    cfg = get_config("gemma3-12b")
+    shape = SHAPES["long_500k"]
+    specs = cache_specs(cfg, shape, MESH)
+    kv = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    five_dim = [s for s in kv if isinstance(s, P) and len(s) == 5]
+    assert five_dim, "no kv specs found"
+    for s in five_dim:
+        seq_entry = s[2]
+        assert seq_entry is not None and "model" in (
+            seq_entry if isinstance(seq_entry, tuple) else (seq_entry,)
+        ), s
+
+
+def test_decode32k_cache_shards_batch_and_sequence():
+    cfg = get_config("llama3.2-1b")
+    shape = SHAPES["decode_32k"]
+    specs = cache_specs(cfg, shape, MESH)
+    kv = [s for s in jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+          if isinstance(s, P) and len(s) == 5]
+    for s in kv:
+        assert s[1] is not None  # batch sharded over fsdp
+        assert s[2] == "model"  # sequence over model
