@@ -1,0 +1,98 @@
+"""Round-throughput: fused run_rounds scan vs per-round jit dispatch.
+
+The paper's experiments are hundreds-to-thousands of *cheap* rounds
+(Table 1: 4000 rounds of a small CNN), so round dispatch overhead — one
+jit call + host-side cohort sampling + metric device→host syncs per round —
+dominates wall clock on the synthetic workload.  This benchmark measures
+the same trajectory both ways:
+
+* sequential: ``engine.run_round`` × N (one jit dispatch per round),
+* fused:      ``engine.run_rounds(state, data, N)`` (ONE lax.scan program,
+  cohort sampling + minibatch gathers on-device, donated state).
+
+Artifact: benchmarks/artifacts/fused_rounds.json with per-path seconds,
+rounds/s, and the speedup factor.  Run via ``python -m benchmarks.run`` or
+directly: ``PYTHONPATH=src python -m benchmarks.fused_rounds [--rounds N]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "fused_rounds.json"
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree_util.tree_leaves(state.params))
+
+
+def main(rounds: int = 100, quiet: bool = False) -> dict:
+    cfg = FedConfig(algo="fedcm", num_clients=64, cohort_size=8, local_steps=5,
+                    participation="fixed")
+    x, y, *_ = make_synthetic_classification(
+        n_classes=10, dim=32, n_train=6400, n_test=10
+    )
+    data = FederatedData(x, y, cfg.num_clients, seed=0)
+    model = mlp_classifier((32, 64, 64, 10))
+    eng = FederatedEngine(cfg, classification_loss(model.apply), batch_size=32)
+
+    def fresh():
+        return eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+
+    # --- warm both paths (compile outside the timed region) ---
+    st = fresh()
+    st, _ = eng.run_round(st, data)
+    _block(st)
+    st, _ = eng.run_rounds(fresh(), data, rounds)
+    _block(st)
+
+    # --- sequential: one dispatch per round ---
+    st = fresh()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        st, _ = eng.run_round(st, data)
+    _block(st)
+    seq_s = time.perf_counter() - t0
+
+    # --- fused: one scanned program ---
+    st = fresh()
+    t0 = time.perf_counter()
+    st, _ = eng.run_rounds(st, data, rounds)
+    _block(st)
+    fused_s = time.perf_counter() - t0
+
+    result = {
+        "workload": {
+            "algo": cfg.algo, "num_clients": cfg.num_clients,
+            "cohort_size": cfg.cohort_size, "local_steps": cfg.local_steps,
+            "batch_size": 32, "model": "mlp 32-64-64-10", "rounds": rounds,
+        },
+        "sequential_s": round(seq_s, 4),
+        "fused_s": round(fused_s, 4),
+        "sequential_rounds_per_s": round(rounds / seq_s, 2),
+        "fused_rounds_per_s": round(rounds / fused_s, 2),
+        "speedup": round(seq_s / fused_s, 2),
+    }
+    ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
+    ARTIFACT.write_text(json.dumps(result, indent=1))
+    if not quiet:
+        print(f"  sequential: {seq_s:.3f}s  ({result['sequential_rounds_per_s']} rounds/s)")
+        print(f"  fused:      {fused_s:.3f}s  ({result['fused_rounds_per_s']} rounds/s)")
+        print(f"  speedup:    {result['speedup']}x  (artifact: {ARTIFACT.name})")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=100)
+    args = ap.parse_args()
+    main(rounds=args.rounds)

@@ -23,7 +23,7 @@ def main() -> int:
     t0 = time.time()
 
     print("=" * 72)
-    print("BENCHMARK 1/5 — Table 1/2 (scaled): main algorithm comparison")
+    print("BENCHMARK 1/6 — Table 1/2 (scaled): main algorithm comparison")
     print("=" * 72)
     if not args.skip_fed:
         from benchmarks.table1_main_comparison import main as t1
@@ -31,7 +31,7 @@ def main() -> int:
         t1(rounds=rounds, seeds=seeds)
 
     print("\n" + "=" * 72)
-    print("BENCHMARK 2/5 — Table 3 + Fig 1 (scaled): FedCM alpha sensitivity")
+    print("BENCHMARK 2/6 — Table 3 + Fig 1 (scaled): FedCM alpha sensitivity")
     print("=" * 72)
     if not args.skip_fed:
         from benchmarks.table3_alpha_sensitivity import main as t3
@@ -39,7 +39,7 @@ def main() -> int:
         t3(rounds=rounds, seeds=seeds)
 
     print("\n" + "=" * 72)
-    print("BENCHMARK 3/5 — participation robustness sweep")
+    print("BENCHMARK 3/6 — participation robustness sweep")
     print("=" * 72)
     if not args.skip_fed:
         from benchmarks.participation_robustness import main as pr
@@ -47,14 +47,22 @@ def main() -> int:
         pr(rounds=rounds, seeds=seeds)
 
     print("\n" + "=" * 72)
-    print("BENCHMARK 4/5 — kernel accounting + correctness at size")
+    print("BENCHMARK 4/6 — kernel accounting + correctness at size")
     print("=" * 72)
     from benchmarks.kernel_microbench import main as km
 
     km()
 
     print("\n" + "=" * 72)
-    print("BENCHMARK 5/5 — roofline table (from dry-run artifacts)")
+    print("BENCHMARK 5/6 — fused run_rounds scan vs per-round dispatch")
+    print("=" * 72)
+    if not args.skip_fed:
+        from benchmarks.fused_rounds import main as fr
+
+        fr(rounds=40 if args.quick else 100)
+
+    print("\n" + "=" * 72)
+    print("BENCHMARK 6/6 — roofline table (from dry-run artifacts)")
     print("=" * 72)
     from benchmarks.roofline import load_rows
 

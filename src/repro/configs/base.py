@@ -211,6 +211,11 @@ class FedConfig:
     # all-reduce of a params-shaped tree — bf16 halves its bytes (production
     # FL systems quantize aggregation much harder than this)
     aggregate_dtype: str = "float32"
+    # route the per-local-step blend x ← x − η_l·(α·g + (1−α)·Δ_t) through
+    # the fused Pallas kernel (kernels/fedcm_update) instead of unfused
+    # tree_map arithmetic; fedcm/mimelite only (they share the blend form),
+    # ref.py is the correctness oracle (tests/test_run_rounds.py)
+    use_fused_kernel: bool = False
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,28 @@ Participation models (§6.1 of the paper):
 Payload accounting mirrors §4.2: FedCM doubles only the DOWNLINK (x_t plus
 Δ_t); uplink is one delta — unchanged from FedAvg.  SCAFFOLD pays both ways
 (c down, Δc_i up); MimeLite pays an extra full-batch gradient up.
+
+Fused multi-round engine (``run_rounds``): the paper's headline results
+(Table 1, §6.1) need hundreds to thousands of rounds, and dispatching each
+round as its own jit call — with host-side cohort sampling in between —
+makes round *dispatch* the wall-clock bottleneck long before the math is.
+``run_rounds(state, data, n_rounds)`` therefore executes N rounds as a
+single ``jax.lax.scan`` whose body does everything a round needs on-device:
+
+* cohort sampling (``sample_cohort``) from the carried rng,
+* synthetic-data minibatch gathers (``repro.data.pipeline.gather_round_batches``,
+  pure array-in/array-out so it traces),
+* the round step itself (the same ``_round_step_impl`` the per-round path
+  jits, so the two paths are numerically one implementation).
+
+The carried ``FedState`` is donated (``donate_argnums``), so server params/
+momentum/client-state buffers are updated in place across all N rounds, and
+per-round ``RoundMetrics`` come back stacked ``(n_rounds, ...)``.  The
+``client_sharding`` constructor arg pins the cohort axis of batches and
+client states via sharding constraints in both the per-round and fused
+paths.  ``cfg.use_fused_kernel`` additionally routes the per-local-step
+FedCM blend through the Pallas ``fedcm_step_tree`` kernel (kernels/
+fedcm_update; ``ref.py`` is the oracle).
 """
 from __future__ import annotations
 
@@ -33,6 +55,8 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FedConfig
 from repro.core.algorithms import (
@@ -43,6 +67,8 @@ from repro.core.algorithms import (
     get_algorithm,
     server_init,
 )
+from repro.data.pipeline import gather_full_client_batch, gather_round_batches
+from repro.kernels.fedcm_update.ops import fedcm_step_tree
 from repro.utils.trees import (
     tree_axpy,
     tree_bytes,
@@ -117,11 +143,17 @@ def client_update(
     """One client's K local steps.  Returns (outputs, mean local loss)."""
     x0 = params
     cst = (client_state, bcast_momentum) if algo.name == "scaffold" else client_state
+    # fedcm and mimelite share the blend form v = α·g + (1−α)·m, which is
+    # exactly what the fused Pallas kernel computes in one HBM pass
+    use_kernel = cfg.use_fused_kernel and algo.name in ("fedcm", "mimelite")
 
     def step(x, batch):
         loss, g = jax.value_and_grad(loss_fn)(x, batch)
         if cfg.weight_decay:
             g = tree_axpy(cfg.weight_decay, x, g)
+        if use_kernel:
+            x = fedcm_step_tree(x, g, bcast_momentum, cfg.alpha, eta_l)
+            return x, loss
         v = algo.direction(cfg, bcast_momentum, cst, x, x0, g)
         # keep the carry dtype stable (bf16 params + f32 momentum promote)
         x = jax.tree_util.tree_map(
@@ -153,9 +185,16 @@ class FederatedEngine:
 
         eng = FederatedEngine(cfg, loss_fn)
         state = eng.init(params, rng)
-        state, metrics = eng.run_round(state, data)     # data: FederatedData
+        state, metrics = eng.run_rounds(state, data, n_rounds)   # fused scan
+        state, metrics = eng.run_round(state, data)     # one round at a time
         # or, lower-level / dry-runnable:
         state, metrics = eng.round_step(state, batches, ids, mask, full_batches)
+
+    ``client_sharding`` (a ``NamedSharding`` whose spec names the mesh axes
+    for the cohort dimension, e.g. ``NamedSharding(mesh, P(("pod","data")))``)
+    is applied as a sharding constraint to the leading axis of every
+    cohort-stacked array — minibatches, gathered client states, and the
+    MimeLite full batches — in both the per-round and fused paths.
     """
 
     def __init__(
@@ -172,6 +211,14 @@ class FederatedEngine:
         self.client_sharding = client_sharding
         self.analysis_unroll = False  # dry-run analysis form
         self._round_step = jax.jit(self._round_step_impl)
+        # traced once per (shapes, n_rounds) — the compile-count regression
+        # test asserts a 100-round run is ONE trace, not 100
+        self.run_rounds_traces = 0
+        self._run_rounds = jax.jit(
+            self._run_rounds_impl,
+            static_argnames=("n_rounds",),
+            donate_argnums=(0,),
+        )
 
     # -------------------------------------------------- init
     def init(self, params, rng) -> FedState:
@@ -196,10 +243,28 @@ class FederatedEngine:
             up += P  # MimeLite full-batch gradient
         return {"down_per_client": down, "up_per_client": up}
 
+    # -------------------------------------------------- cohort sharding
+    def _constrain_cohort(self, tree):
+        """Pin the leading (cohort) axis of every leaf to ``client_sharding``."""
+        if self.client_sharding is None or tree is None:
+            return tree
+        mesh = self.client_sharding.mesh
+        spec = self.client_sharding.spec
+        cohort_axes = spec[0] if len(spec) else None
+
+        def pin(a):
+            s = NamedSharding(mesh, P(cohort_axes, *([None] * (a.ndim - 1))))
+            return jax.lax.with_sharding_constraint(a, s)
+
+        return jax.tree_util.tree_map(pin, tree)
+
     # -------------------------------------------------- round
     def _round_step_impl(self, state: FedState, batches, ids, mask, full_batches):
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, state.server.round)
+
+        batches = self._constrain_cohort(batches)
+        full_batches = self._constrain_cohort(full_batches)
 
         # gather per-client states for the cohort (stale entries untouched)
         if algo.needs_client_state:
@@ -208,6 +273,7 @@ class FederatedEngine:
             cohort_cst = jax.tree_util.tree_map(
                 lambda p: jnp.zeros((ids.shape[0], *p.shape), p.dtype), state.params
             )
+        cohort_cst = self._constrain_cohort(cohort_cst)
 
         def one_client(cst_i, batches_i, full_i):
             return client_update(
@@ -272,23 +338,71 @@ class FederatedEngine:
         return self._round_step(state, batches, ids, mask, full_batches)
 
     # -------------------------------------------------- data-driven round
-    def run_round(self, state: FedState, data) -> Tuple[FedState, RoundMetrics]:
-        """Samples cohort + minibatches from a FederatedData and steps."""
+    def _prepare_round(self, state: FedState, client_x, client_y):
+        """Per-round setup shared VERBATIM by ``run_round`` and the
+        ``run_rounds`` scan body: rng threading, cohort sampling, minibatch
+        and (MimeLite) full-batch gathers.  One implementation is what
+        makes the two paths' trajectories identical — don't fork it.
+
+        Returns (state-with-advanced-rng, batches, ids, mask, full).
+        """
         rng, k_cohort, k_batch = jax.random.split(state.rng, 3)
         ids, mask = sample_cohort(k_cohort, self.cfg)
-        raw = data.sample_round_batches(
-            k_batch, ids, self.cfg.local_steps, self.batch_size
+        raw = gather_round_batches(
+            client_x, client_y, k_batch, ids, self.cfg.local_steps, self.batch_size
         )
         batches = self._to_loss_batches(raw)
-        full = None
         if self.algo.needs_full_grad:
-            full = self._to_loss_batches(data.full_client_batch(ids))
-        state = state._replace(rng=rng)
+            full = self._to_loss_batches(
+                gather_full_client_batch(client_x, client_y, ids)
+            )
+        else:
+            # (C, B, ...) dummy with the right treedef for vmap; unused
+            # unless needs_full_grad
+            full = jax.tree_util.tree_map(lambda b: b[:, 0], batches)
+        return state._replace(rng=rng), batches, ids, mask, full
+
+    def run_round(self, state: FedState, data) -> Tuple[FedState, RoundMetrics]:
+        """Samples cohort + minibatches from a FederatedData and steps."""
+        state, batches, ids, mask, full = self._prepare_round(
+            state, data.client_x, data.client_y
+        )
         return self.round_step(state, batches, ids, mask, full)
+
+    # -------------------------------------------------- fused multi-round
+    def run_rounds(self, state: FedState, data, n_rounds: int) -> Tuple[FedState, RoundMetrics]:
+        """Execute ``n_rounds`` communication rounds as ONE jitted lax.scan.
+
+        Cohort sampling and minibatch drawing happen inside the scan body
+        (no host round-trips), the carried ``FedState`` is donated, and the
+        per-round metrics come back stacked with a leading ``(n_rounds,)``
+        axis.  Numerically equivalent to calling ``run_round`` ``n_rounds``
+        times (same rng threading, same ``_round_step_impl``); the
+        equivalence test in tests/test_run_rounds.py holds all algorithms
+        to that.
+
+        The input ``state`` may be donated to the computation — use the
+        returned state, not the argument, afterwards.
+        """
+        if n_rounds < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+        return self._run_rounds(state, data.client_x, data.client_y, n_rounds=n_rounds)
+
+    def _run_rounds_impl(self, state: FedState, client_x, client_y, n_rounds: int):
+        self.run_rounds_traces += 1  # python side effect: counts traces only
+
+        def body(st, _):
+            st, batches, ids, mask, full = self._prepare_round(st, client_x, client_y)
+            return self._round_step_impl(st, batches, ids, mask, full)
+
+        return jax.lax.scan(body, state, None, length=n_rounds)
 
     @staticmethod
     def _to_loss_batches(raw):
-        """{"x","y"} → loss_fn batch dict (pass-through for custom dicts)."""
+        """{"x","y"} → loss_fn batch dict (pass-through for custom dicts).
+
+        Must stay traceable: ``run_rounds`` calls it inside a jitted scan.
+        """
         return raw
 
 

@@ -9,6 +9,13 @@ can be gathered as one device-friendly array per round:
 
 which the round engine consumes with vmap(client)->scan(K).  On a mesh the
 cohort axis is sharded over ("pod","data").
+
+The gathers themselves live in the module-level pure functions
+``gather_round_batches`` / ``gather_full_client_batch`` (arrays in, arrays
+out, fully traceable) so the fused multi-round engine
+(``FederatedEngine.run_rounds``) can draw minibatches *inside* its jitted
+``lax.scan`` body instead of round-tripping to the host between rounds; the
+``FederatedData`` methods are thin wrappers over the same functions.
 """
 from __future__ import annotations
 
@@ -20,6 +27,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.dirichlet import dirichlet_partition
+
+
+def gather_round_batches(
+    client_x: jax.Array,  # (N, n_per_client, ...)
+    client_y: jax.Array,  # (N, n_per_client)
+    rng: jax.Array,
+    cohort_idx: jax.Array,  # (S,) int32 client ids
+    local_steps: int,
+    batch_size: int,
+) -> Dict[str, jax.Array]:
+    """Pure, jit-safe cohort minibatch gather: (S, K, B, ...) per field.
+
+    Sampling is with replacement at the minibatch level (standard local SGD
+    on small client datasets); shapes depend only on the static (S, K, B).
+    """
+    S = cohort_idx.shape[0]
+    n_per = client_x.shape[1]
+    idx = jax.random.randint(rng, (S, local_steps, batch_size), 0, n_per)
+    x = client_x[cohort_idx[:, None, None], idx]
+    y = client_y[cohort_idx[:, None, None], idx]
+    return {"x": x, "y": y}
+
+
+def gather_full_client_batch(
+    client_x: jax.Array, client_y: jax.Array, client_ids: jax.Array
+) -> Dict[str, jax.Array]:
+    """Pure, jit-safe full-local-dataset gather (MimeLite's x_t gradient)."""
+    return {"x": client_x[client_ids], "y": client_y[client_ids]}
 
 
 class FederatedData:
@@ -51,18 +86,14 @@ class FederatedData:
         SGD on small client datasets).  jit-safe: shapes depend only on
         (S, K, B).
         """
-        S = cohort_idx.shape[0]
-        idx = jax.random.randint(
-            rng, (S, local_steps, batch_size), 0, self.n_per_client
+        return gather_round_batches(
+            self.client_x, self.client_y, rng, cohort_idx, local_steps, batch_size
         )
-        x = self.client_x[cohort_idx[:, None, None], idx]
-        y = self.client_y[cohort_idx[:, None, None], idx]
-        return {"x": x, "y": y}
 
     def full_client_batch(self, client_ids: jax.Array) -> Dict[str, jax.Array]:
         """Full local dataset for given clients (used by MimeLite's full-batch
         gradient at x_t)."""
-        return {"x": self.client_x[client_ids], "y": self.client_y[client_ids]}
+        return gather_full_client_batch(self.client_x, self.client_y, client_ids)
 
 
 def lm_batch_iterator(

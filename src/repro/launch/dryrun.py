@@ -29,6 +29,7 @@ from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.launch.hlo_stats import collective_stats, op_census
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, n_chips
 from repro.launch.steps import Knobs, build_step
+from repro.utils.compat import set_mesh
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
 
@@ -81,7 +82,7 @@ def knobs_for(arch: str, shape_name: str, overrides: dict | None = None) -> Knob
 def _cost_of(cfg, shape, mesh, knobs):
     """Compile the unrolled form of ``cfg`` and return (flops, bytes, coll, census)."""
     bundle = build_step(cfg, shape, mesh, knobs)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = bundle.lower().compile()
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
@@ -180,7 +181,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, quiet: bool = False,
 
     exec_knobs = _dc.replace(knobs, scan_unroll=1)
     bundle_exec = build_step(cfg, shape, mesh, exec_knobs)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled_exec = bundle_exec.lower().compile()
     mem = compiled_exec.memory_analysis()
     bundle = bundle_exec

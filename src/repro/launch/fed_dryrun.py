@@ -37,6 +37,7 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_m
 from repro.launch.steps import _ns
 from repro.models import build_model
 from repro.sharding.rules import param_specs
+from repro.utils.compat import set_mesh
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun_fed"
 
@@ -119,7 +120,7 @@ def build_and_lower(
         ),
         donate_argnums=(0,),
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(state_sds, batches_sds, ids_sds, mask_sds, full_sds)
         compiled = lowered.compile()
     return compiled, cfg, fed

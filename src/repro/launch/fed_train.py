@@ -5,6 +5,11 @@ on Dirichlet-partitioned synthetic classification (paper §6.1 scaled; see
 EXPERIMENTS.md §Repro) or on a federated LM task where every client holds a
 *different* Markov chain (natural heterogeneity).
 
+Rounds between evaluations execute as ONE fused ``engine.run_rounds`` scan
+(cohort sampling + minibatch draws on-device, state donated) — per-round
+python dispatch only happens with ``--per-round``, kept for A/B timing
+against the fused path (benchmarks/fused_rounds.py measures the gap).
+
     PYTHONPATH=src python -m repro.launch.fed_train --algo fedcm \
         --clients 100 --cohort 10 --rounds 100 --dirichlet 0.6
 """
@@ -37,6 +42,7 @@ def run_federated(
     eval_every: int = 25,
     seed: int = 0,
     echo: bool = True,
+    fused: bool = True,
 ):
     """Returns (final_test_acc, history MetricLogger)."""
     x_tr, y_tr, x_te, y_te = make_synthetic_classification(
@@ -55,6 +61,20 @@ def run_federated(
     )
     x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
     acc = 0.0
+    if fused:
+        # eval_every rounds per jitted scan; metrics come back stacked and
+        # we log the chunk's final round (same cadence as the --per-round path)
+        r = 0
+        while r < cfg.rounds:
+            chunk = min(eval_every, cfg.rounds - r)
+            state, ms = eng.run_rounds(state, data, chunk)
+            r += chunk
+            acc = evaluate(state.params, x_te_j, y_te_j)
+            log.log(round=r, algo=cfg.algo, loss=round(float(ms.loss[-1]), 4),
+                    test_acc=round(acc, 4), n_active=int(ms.n_active[-1]),
+                    mb_down=round(float(ms.bytes_down[-1]) / 2**20, 2),
+                    mb_up=round(float(ms.bytes_up[-1]) / 2**20, 2))
+        return acc, log
     for r in range(cfg.rounds):
         state, m = eng.run_round(state, data)
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
@@ -82,15 +102,20 @@ def main() -> int:
     ap.add_argument("--participation", default="bernoulli", choices=["fixed", "bernoulli"])
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--per-round", action="store_true",
+                    help="dispatch each round separately (A/B against fused scan)")
+    ap.add_argument("--fused-kernel", action="store_true",
+                    help="route local steps through the Pallas fedcm_update kernel")
     args = ap.parse_args()
 
     cfg = FedConfig(
         algo=args.algo, num_clients=args.clients, cohort_size=args.cohort,
         local_steps=args.local_steps, alpha=args.alpha, eta_l=args.eta_l,
         eta_g=args.eta_g, participation=args.participation, rounds=args.rounds,
-        seed=args.seed,
+        seed=args.seed, use_fused_kernel=args.fused_kernel,
     )
-    acc, _ = run_federated(cfg, args.dirichlet, eval_every=args.eval_every, seed=args.seed)
+    acc, _ = run_federated(cfg, args.dirichlet, eval_every=args.eval_every,
+                           seed=args.seed, fused=not args.per_round)
     print(f"\n{args.algo}: final test accuracy = {acc:.4f}")
     return 0
 

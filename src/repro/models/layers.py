@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.utils.compat import shard_map
 
 # ----------------------------------------------------------------------
 # parallel context
@@ -419,7 +420,7 @@ def _cache_write_shardmap(cache, kv_new, pos, kv_spec, parallel):
         mask = iota == local  # off-shard ⇒ never equal ⇒ no-op
         return jnp.where(mask, kv_loc.astype(c_loc.dtype), c_loc)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(kv_spec, kv_in_spec, P()),
         out_specs=kv_spec,
@@ -614,7 +615,7 @@ def moe_dropping(params, x, *, cfg: ModelConfig, parallel: Optional[ParallelCont
         P(maxis, None, None),
     )
     specs_out = (P(parallel.data_axes, None, None), P())
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh, in_specs=specs_in, out_specs=specs_out, check_vma=False
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
     if cfg.shared_expert:

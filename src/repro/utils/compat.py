@@ -1,0 +1,72 @@
+"""jax version-compatibility shims.
+
+Compat policy (this repo pins nothing; the container pins jax): the code
+is written against the *current* public jax API (``jax.set_mesh``,
+``jax.shard_map``), and every call site that drifted across jax releases
+goes through this module instead of jax directly.  Each shim resolves the
+right symbol for the installed jax at call time:
+
+* ``set_mesh(mesh)`` — context manager making ``mesh`` the ambient mesh.
+  jax >= 0.5 exposes ``jax.set_mesh``; on 0.4.x a ``jax.sharding.Mesh`` is
+  itself a context manager, so the mesh object is returned directly.
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)`` —
+  newer jax has top-level ``jax.shard_map`` with the ``check_vma`` kwarg;
+  0.4.x has ``jax.experimental.shard_map.shard_map`` where the same knob
+  is spelled ``check_rep``.
+
+Resolution happens per call (cheap ``hasattr``), not at import, so tests
+can exercise both paths by monkeypatching the ``jax`` module.  New code
+should import from here rather than hand-rolling version checks.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager setting ``mesh`` as the ambient mesh.
+
+    Usage::
+
+        with set_mesh(mesh):
+            compiled = fn.lower(...).compile()
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # jax 0.4.x: Mesh implements the context-manager protocol itself.
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    Accepts the modern keyword ``check_vma``; where the resolved function
+    still spells it ``check_rep`` (0.4.x experimental, and the promotion
+    window where ``jax.shard_map`` exists but predates the rename) it is
+    translated.  The kwarg spelling is detected from the resolved
+    function's own signature — the two API changes (promotion out of
+    experimental, check_rep→check_vma rename) landed in different jax
+    releases, so one must not be inferred from the other.  All other
+    kwargs pass through untouched.
+    """
+    toplevel = hasattr(jax, "shard_map")
+    if toplevel:
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+
+    if check_vma is not None:
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):  # C-level / wrapped callables
+            params = {}
+        if "check_vma" in params:
+            key = "check_vma"
+        elif "check_rep" in params:
+            key = "check_rep"
+        else:  # **kwargs-only signature: fall back on the symbol's home
+            key = "check_vma" if toplevel else "check_rep"
+        kwargs[key] = check_vma
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

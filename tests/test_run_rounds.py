@@ -1,0 +1,134 @@
+"""Fused multi-round engine (engine.run_rounds) regression tests.
+
+* trajectory equivalence: run_rounds(n) must reproduce the sequential
+  run_round × n trajectory (params, server momentum, metrics) to tolerance
+  for fedcm + fedavg + scaffold (stateful) — same rng threading, same
+  round-step implementation, so the tolerance is tight.
+* compile-count: N rounds execute as ONE trace of the scanned program, and
+  a second call with the same shapes does not retrace.
+* fused Pallas kernel path (cfg.use_fused_kernel): matches the unfused
+  tree_map arithmetic (ref.py is the kernel's own oracle in test_kernels).
+* client_sharding: constraining the cohort axis changes nothing numerically.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+N_ROUNDS = 5
+
+
+def _setup(algo, **kw):
+    x, y, *_ = make_synthetic_classification(n_classes=4, dim=8, n_train=800, n_test=8)
+    model = mlp_classifier((8, 16, 4))
+    base = dict(algo=algo, num_clients=10, cohort_size=3, local_steps=2,
+                participation="fixed")
+    base.update(kw)
+    cfg = FedConfig(**base)
+    eng = FederatedEngine(cfg, classification_loss(model.apply), batch_size=8)
+    data = FederatedData(x, y, cfg.num_clients, seed=0)
+    return cfg, eng, data, model
+
+
+def _fresh_state(eng, model):
+    return eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+
+
+def _assert_trees_close(a, b, rtol=2e-5, atol=1e-6):
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("algo", ["fedcm", "fedavg", "scaffold"])
+def test_run_rounds_matches_sequential_trajectory(algo):
+    cfg, eng, data, model = _setup(algo)
+    st = _fresh_state(eng, model)
+    seq_metrics = []
+    for _ in range(N_ROUNDS):
+        st, m = eng.run_round(st, data)
+        seq_metrics.append(m)
+
+    fused_st, fused_m = eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
+
+    _assert_trees_close(st.params, fused_st.params)
+    _assert_trees_close(st.server.momentum, fused_st.server.momentum)
+    if cfg.algo == "scaffold":
+        _assert_trees_close(st.client_states, fused_st.client_states)
+    assert int(fused_st.server.round) == N_ROUNDS
+    # stacked per-round metrics match the sequential per-round values
+    assert fused_m.loss.shape == (N_ROUNDS,)
+    np.testing.assert_allclose(
+        np.array([float(m.loss) for m in seq_metrics]),
+        np.asarray(fused_m.loss), rtol=2e-5,
+    )
+    np.testing.assert_allclose(
+        np.array([float(m.eta_l) for m in seq_metrics]),
+        np.asarray(fused_m.eta_l), rtol=1e-6,
+    )
+    np.testing.assert_array_equal(
+        np.array([float(m.n_active) for m in seq_metrics]),
+        np.asarray(fused_m.n_active),
+    )
+
+
+def test_run_rounds_is_one_trace_and_caches():
+    _, eng, data, model = _setup("fedcm")
+    assert eng.run_rounds_traces == 0
+    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
+    assert eng.run_rounds_traces == 1  # N rounds, ONE trace of the scan
+    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
+    assert eng.run_rounds_traces == 1  # same shapes: cached, no retrace
+    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS + 1)
+    assert eng.run_rounds_traces == 2  # new static n_rounds: one new trace
+
+
+def test_run_rounds_rejects_nonpositive():
+    _, eng, data, model = _setup("fedcm")
+    with pytest.raises(ValueError):
+        eng.run_rounds(_fresh_state(eng, model), data, 0)
+
+
+@pytest.mark.parametrize("algo", ["fedcm", "mimelite"])
+def test_fused_kernel_path_matches_reference(algo):
+    cfg, eng, data, model = _setup(algo)
+    engk = FederatedEngine(replace(cfg, use_fused_kernel=True), eng.loss_fn, batch_size=8)
+    s_ref, m_ref = eng.run_rounds(_fresh_state(eng, model), data, 3)
+    s_k, m_k = engk.run_rounds(_fresh_state(engk, model), data, 3)
+    _assert_trees_close(s_ref.params, s_k.params, rtol=1e-5, atol=1e-7)
+    _assert_trees_close(s_ref.server.momentum, s_k.server.momentum, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m_ref.loss), np.asarray(m_k.loss), rtol=1e-5)
+
+
+def test_client_sharding_constraint_is_numerically_inert():
+    cfg, eng, data, model = _setup("fedcm")
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    engs = FederatedEngine(
+        cfg, eng.loss_fn, batch_size=8,
+        client_sharding=NamedSharding(mesh, P("data")),
+    )
+    s_ref, _ = eng.run_rounds(_fresh_state(eng, model), data, 3)
+    s_sh, _ = engs.run_rounds(_fresh_state(engs, model), data, 3)
+    _assert_trees_close(s_ref.params, s_sh.params, rtol=1e-5, atol=1e-7)
+    # per-round path honors the constraint too
+    st = _fresh_state(engs, model)
+    st, m = engs.run_round(st, data)
+    assert np.isfinite(float(m.loss))
+
+
+def test_run_rounds_bernoulli_participation():
+    """Masked (bernoulli) cohorts also survive the fused path."""
+    cfg, eng, data, model = _setup("fedcm", participation="bernoulli",
+                                   num_clients=20, cohort_size=5)
+    st, ms = eng.run_rounds(_fresh_state(eng, model), data, 4)
+    assert np.all(np.asarray(ms.n_active) >= 1)
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
