@@ -59,7 +59,9 @@ def main() -> int:
     if not args.skip_fed:
         from benchmarks.fused_rounds import main as fr
 
-        fr(rounds=40 if args.quick else 100)
+        # quick: fewer rounds AND fewer interleaved timing repetitions —
+        # fused_rounds now measures two workloads (tree vs flat per each)
+        fr(rounds=20 if args.quick else 60, alts=2 if args.quick else 8)
 
     print("\n" + "=" * 72)
     print("BENCHMARK 6/6 — roofline table (from dry-run artifacts)")

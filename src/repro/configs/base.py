@@ -211,10 +211,20 @@ class FedConfig:
     # all-reduce of a params-shaped tree — bf16 halves its bytes (production
     # FL systems quantize aggregation much harder than this)
     aggregate_dtype: str = "float32"
-    # route the per-local-step blend x ← x − η_l·(α·g + (1−α)·Δ_t) through
-    # the fused Pallas kernel (kernels/fedcm_update) instead of unfused
-    # tree_map arithmetic; fedcm/mimelite only (they share the blend form),
-    # ref.py is the correctness oracle (tests/test_run_rounds.py)
+    # flat parameter plane (repro.core.flat): ravel params/momentum/client
+    # state ONCE per run_rounds call and carry (P,)/(C,P)/(N,P) buffers
+    # through the local-step scan, cohort vmap, aggregation, and server
+    # update.  The tree path (False) is kept as the numerical oracle and
+    # for tensor-sharded lowering (launch/fed_dryrun pins it off: a flat
+    # concat of model-sharded leaves would force all-gathers).
+    use_flat_plane: bool = True
+    # route the per-local-step update x ← x − η_l·v through the fused
+    # Pallas kernels instead of unfused jnp arithmetic.  On the flat plane
+    # this is kernels/fed_direction (all algorithms) plus the fused
+    # kernels/server_update round-close (fedavg/fedcm/scaffold/mimelite);
+    # on the tree path it is the legacy kernels/fedcm_update whole-tree
+    # launch (fedcm/mimelite only).  ref.py files are the oracles
+    # (tests/test_run_rounds.py, tests/test_kernels.py).
     use_fused_kernel: bool = False
 
 

@@ -3,8 +3,10 @@ from repro.core.algorithms import (
     ALGORITHMS,
     Algorithm,
     ClientOutputs,
+    FlatClientOutputs,
     ServerState,
     client_state_init,
+    sparse_client_finalize,
     get_algorithm,
     server_init,
 )
@@ -14,17 +16,23 @@ from repro.core.engine import (
     RoundMetrics,
     client_update,
     cohort_capacity,
+    flat_client_update,
     local_learning_rate,
     make_eval_fn,
     sample_cohort,
 )
+from repro.core.flat import FlatSpec, LeafSpec
 
 __all__ = [
     "ALGORITHMS",
     "Algorithm",
     "ClientOutputs",
+    "FlatClientOutputs",
+    "FlatSpec",
+    "LeafSpec",
     "ServerState",
     "client_state_init",
+    "sparse_client_finalize",
     "get_algorithm",
     "server_init",
     "FederatedEngine",
@@ -32,6 +40,7 @@ __all__ = [
     "RoundMetrics",
     "client_update",
     "cohort_capacity",
+    "flat_client_update",
     "local_learning_rate",
     "make_eval_fn",
     "sample_cohort",

@@ -25,6 +25,15 @@ state (``client_state_init`` is None); SCAFFOLD and FedDyn keep per-client
 control variates, which is exactly what the paper blames for their
 degradation at 2% participation — the engine stores them stacked (N, …) and
 leaves non-participants stale, reproducing that failure mode honestly.
+
+Flat fast path: every piece below is *array-polymorphic* — a bare jax
+array is a single-leaf pytree, so ``direction``/``server_update`` run
+unchanged on the flat ``(P,)`` parameter plane (``repro.core.flat``).  The
+flat-only additions are ``FlatClientOutputs`` (optional planes: algorithms
+that keep no client state / full-batch grad carry ``None`` instead of a
+materialized ``(C, P)`` zeros plane) and ``sparse_client_finalize`` which
+produces them with the same op order as the tree finalizers, so the two
+paths stay bitwise-comparable (tests/test_flat.py holds them to it).
 """
 from __future__ import annotations
 
@@ -235,6 +244,48 @@ def _srv_mimelite(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, et
         lambda mi, gi: (1.0 - cfg.alpha) * mi + cfg.alpha * gi, st.momentum, mean_extra
     )
     return new_params, st._replace(momentum=m, round=st.round + 1)
+
+
+# ----------------------------------------------------------------------
+# flat-plane fast path
+# ----------------------------------------------------------------------
+
+
+class FlatClientOutputs(NamedTuple):
+    """Per-client uplink on the flat plane.  Unused planes are ``None`` —
+    the tree path materializes (and aggregates) zeros trees for them, which
+    for a stateless algorithm is two full (C, P) writes + reductions of
+    nothing; skipping them is part of the flat engine's win."""
+
+    delta: Any  # (P,) x_{i,K} − x_t
+    state_delta: Optional[Any]  # (P,) SCAFFOLD Δc_i / FedDyn Δλ_i, or None
+    extra: Optional[Any]  # (P,) MimeLite full-batch grad, or None
+
+
+def sparse_client_finalize(
+    algo: Algorithm, cfg: FedConfig, x0, xK, cst, eta_l, full_grad
+) -> FlatClientOutputs:
+    """``algo.client_finalize`` minus the zeros trees it materializes:
+    unused planes come back ``None``.  Array-polymorphic — the flat
+    engine's kernel path feeds it bare ``(P,)`` buffers (single-leaf
+    pytrees), the jnp path feeds it leaf trees.  Op order deliberately
+    mirrors the tree finalizers exactly (e.g. SCAFFOLD computes ``c_new``
+    then subtracts ``c_i`` instead of the algebraically-equal
+    ``−c − Δ/(K·η_l)``) so flat and tree trajectories agree bitwise, not
+    just to tolerance."""
+    delta = tree_sub(xK, x0)
+    state_delta = None
+    if algo.name == "scaffold":
+        c_i, c = cst
+        K = cfg.local_steps
+        c_new = jax.tree_util.tree_map(
+            lambda ci, cg, d: ci - cg - d / (K * eta_l), c_i, c, delta
+        )
+        state_delta = tree_sub(c_new, c_i)
+    elif algo.name == "feddyn":
+        state_delta = tree_scale(delta, -cfg.feddyn_alpha)
+    extra = full_grad if algo.needs_full_grad else None
+    return FlatClientOutputs(delta, state_delta, extra)
 
 
 ALGORITHMS: Dict[str, Algorithm] = {

@@ -43,9 +43,31 @@ momentum/client-state buffers are updated in place across all N rounds, and
 per-round ``RoundMetrics`` come back stacked ``(n_rounds, ...)``.  The
 ``client_sharding`` constructor arg pins the cohort axis of batches and
 client states via sharding constraints in both the per-round and fused
-paths.  ``cfg.use_fused_kernel`` additionally routes the per-local-step
-FedCM blend through the Pallas ``fedcm_step_tree`` kernel (kernels/
-fedcm_update; ``ref.py`` is the oracle).
+paths.
+
+Flat parameter plane (``cfg.use_flat_plane``, default on): params and
+server momentum/second-moment are ravelled ONCE per ``run_rounds`` call
+(``repro.core.flat.FlatSpec``) into contiguous ``(P,)`` buffers that carry
+the round-scope state; every round-scope reduction lands flat — masked
+cohort means concatenate per-leaf contractions into ONE ``(P,)`` buffer,
+the server update and metric norms are single fused ops, and stateless
+algorithms never materialize the zero state/extra planes the tree path
+builds and aggregates.  The K-step local scan itself keeps the LEAF form
+(model autodiff is per-leaf; a flat↔tree conversion per step measures
+2-3× slower on CPU XLA), so its body is bitwise the tree path's.  Under
+``use_fused_kernel`` the scan flips to the flat ``(P,)`` carry — the
+kernels consume flat buffers directly, per-client control variates ride an
+``(N, P)`` plane (ONE gather/scatter), and the per-step concatenate/split
+of the PR-1 kernel route disappears entirely.  The tree path
+(``use_flat_plane=False``) is retained verbatim as the numerical oracle
+(tests/test_flat.py) and for tensor-sharded lowering (launch/fed_dryrun).
+
+``cfg.use_fused_kernel`` routes the update phase through Pallas: on the
+flat plane, the per-local-step direction via ``kernels/fed_direction`` (all
+algorithms) and the round-close masked-mean + momentum EMA + param step via
+``kernels/server_update`` (fedavg/fedcm/scaffold/mimelite); on the tree
+path, the legacy whole-tree ``fedcm_step_tree`` launch (fedcm/mimelite).
+Each kernel's ``ref.py`` is its oracle.
 """
 from __future__ import annotations
 
@@ -66,10 +88,15 @@ from repro.core.algorithms import (
     client_state_init,
     get_algorithm,
     server_init,
+    sparse_client_finalize,
 )
+from repro.core.flat import FlatSpec
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
+from repro.kernels.fed_direction.ops import flat_direction_step
 from repro.kernels.fedcm_update.ops import fedcm_step_tree
+from repro.kernels.server_update.ops import fused_server_step
 from repro.utils.trees import (
+    ravel_leaves,
     tree_axpy,
     tree_bytes,
     tree_scale,
@@ -173,6 +200,86 @@ def client_update(
     return outs, jnp.mean(losses)
 
 
+def flat_client_update(
+    algo: Algorithm,
+    cfg: FedConfig,
+    loss_fn: Callable[[Any, Any], jax.Array],
+    spec: FlatSpec,
+    x_t: jax.Array,  # (P,) broadcast round anchor (flat)
+    x0_tree,  # the same anchor as a tree (unravelled ONCE per round)
+    m_t: jax.Array,  # (P,) Δ_t (or c for scaffold; zeros otherwise)
+    m_tree,  # its tree view (unravelled ONCE per round)
+    cst_tree_i,  # this client's c_i / λ_i as a tree slice, or None
+    cst_flat_i,  # the same as a (P,) plane row, or None
+    batches,  # pytree of (K, B, …) local minibatches
+    eta_l,
+    full_grad_batch=None,  # MimeLite: the client's whole dataset
+    unroll: bool = False,  # dry-run analysis: count every local step
+):
+    """One client's K local steps, finalized onto flat-engine outputs.
+
+    jnp path: the local scan carries the LEAF form — model autodiff is
+    per-leaf anyway, and a flat↔tree conversion per step would add unfused
+    ops to the hottest loop (measured ~2-3× slower on CPU XLA) — so the
+    step body is bitwise the tree path's, and the client's outputs stay
+    leaf trees with ``None`` for unused planes
+    (``sparse_client_finalize``).  The engine then reduces them straight to
+    flat ``(P,)`` MEANS — the full ``(C, P)`` cohort plane is never
+    materialized (a batched concatenate costs more than the per-leaf
+    contractions it would save).
+
+    ``cfg.use_fused_kernel`` flips the scan onto the flat ``(P,)`` carry
+    instead: the ``fed_direction`` kernel consumes flat buffers directly
+    (no per-step concatenate/split — the loss unravels the plane by
+    slicing, which fuses on TPU where this path is aimed) and the outputs
+    ARE ``(P,)`` planes, giving the ``(C, P)`` delta plane the fused
+    ``server_update`` kernel wants for free.
+    """
+    if cfg.use_fused_kernel:
+        def flat_loss(flat, batch):
+            return loss_fn(spec.unravel(flat), batch)
+
+        cst = (cst_flat_i, m_t) if algo.name == "scaffold" else cst_flat_i
+
+        def step(x, batch):
+            loss, g = jax.value_and_grad(flat_loss)(x, batch)
+            if cfg.weight_decay:
+                g = cfg.weight_decay * x + g
+            x = flat_direction_step(algo.name, cfg, x, g, m_t, cst, x_t, eta_l)
+            return x, loss
+
+        xK_flat, losses = jax.lax.scan(step, x_t, batches,
+                                       unroll=cfg.local_steps if unroll else 1)
+        full_grad = None
+        if algo.needs_full_grad:
+            assert full_grad_batch is not None
+            full_grad = jax.grad(flat_loss)(x_t, full_grad_batch)
+        outs = sparse_client_finalize(algo, cfg, x_t, xK_flat, cst, eta_l, full_grad)
+        return outs, jnp.mean(losses)
+
+    cst = (cst_tree_i, m_tree) if algo.name == "scaffold" else cst_tree_i
+
+    def step(x, batch):
+        loss, g = jax.value_and_grad(loss_fn)(x, batch)
+        if cfg.weight_decay:
+            g = tree_axpy(cfg.weight_decay, x, g)
+        v = algo.direction(cfg, m_tree, cst, x, x0_tree, g)
+        # keep the carry dtype stable (bf16 params + f32 momentum promote)
+        x = jax.tree_util.tree_map(
+            lambda xi, vi: (xi - eta_l * vi).astype(xi.dtype), x, v
+        )
+        return x, loss
+
+    xK, losses = jax.lax.scan(step, x0_tree, batches,
+                              unroll=cfg.local_steps if unroll else 1)
+    full_grad = None
+    if algo.needs_full_grad:
+        assert full_grad_batch is not None
+        full_grad = jax.grad(loss_fn)(x0_tree, full_grad_batch)
+    outs = sparse_client_finalize(algo, cfg, x0_tree, xK, cst, eta_l, full_grad)
+    return outs, jnp.mean(losses)
+
+
 # ----------------------------------------------------------------------
 # engine
 # ----------------------------------------------------------------------
@@ -232,7 +339,11 @@ class FederatedEngine:
     # -------------------------------------------------- payload accounting
     def payload_bytes(self, params) -> Dict[str, int]:
         """Per-client per-round communication in bytes (§4.2 discussion)."""
-        P = tree_bytes(params)
+        return self._payload_from_nbytes(tree_bytes(params))
+
+    def _payload_from_nbytes(self, P: int) -> Dict[str, int]:
+        """Payload accounting from a total byte count — the flat path charges
+        ``FlatSpec.nbytes`` (the wire dtypes), identical to ``tree_bytes``."""
         down = P  # x_t always goes down
         up = P  # Δ_i always goes up
         if self.algo.needs_momentum_broadcast:
@@ -258,8 +369,202 @@ class FederatedEngine:
 
         return jax.tree_util.tree_map(pin, tree)
 
+    # -------------------------------------------------- flat plane
+    def _ravel_state(self, state: FedState, spec: FlatSpec) -> FedState:
+        """Tree state → flat-plane state: the ONE ravel of a run_rounds call.
+        Params/second-moment become f32 ``(P,)`` planes and momentum a
+        ``momentum_dtype`` plane.  Stacked per-client control variates
+        become an ``(N, P)`` plane on the kernel path (whose clients
+        produce flat buffers anyway, so gather/scatter are ONE op each);
+        the jnp path keeps them in leaf form — its local steps consume
+        leaves, and a per-round (C, P) concatenate costs more than the
+        per-leaf gather/scatter it would replace."""
+        cfg = self.cfg
+        fsrv = ServerState(
+            momentum=spec.ravel(state.server.momentum, dtype=cfg.momentum_dtype),
+            second_moment=spec.ravel(state.server.second_moment),
+            round=state.server.round,
+        )
+        fcst = state.client_states
+        if fcst is not None and cfg.use_fused_kernel:
+            fcst = spec.ravel(fcst, batch_dims=1)
+        return FedState(spec.ravel(state.params), fsrv, fcst, state.rng)
+
+    def _unravel_state(self, fstate: FedState, spec: FlatSpec) -> FedState:
+        """Flat-plane state → tree state (leaf shapes AND dtypes restored)."""
+        cfg = self.cfg
+        srv = ServerState(
+            momentum=spec.unravel(fstate.server.momentum, dtype=cfg.momentum_dtype),
+            second_moment=spec.unravel(fstate.server.second_moment),
+            round=fstate.server.round,
+        )
+        cst = fstate.client_states
+        if cst is not None and cfg.use_fused_kernel:
+            cst = spec.unravel(cst)
+        return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng)
+
+    def _flat_round_step(self, fstate: FedState, batches, ids, mask,
+                         full_batches, spec: FlatSpec):
+        """One round entirely on the flat plane: (P,) carry through the
+        local-step scan, (C, P) cohort planes through aggregation, (N, P)
+        client-state scatter.  Same math as ``_tree_round_step`` — the
+        equivalence tests in tests/test_flat.py hold the two bitwise-close."""
+        cfg, algo = self.cfg, self.algo
+        eta_l = local_learning_rate(cfg, fstate.server.round)
+        batches = self._constrain_cohort(batches)
+
+        x_t = fstate.params  # (P,) f32
+        m_t = fstate.server.momentum  # (P,) momentum_dtype
+        # leaf views for the local scan — unravelled ONCE per round (x0 is
+        # the scan carry init, so its slices materialize at loop entry; the
+        # momentum view is a loop-invariant closure)
+        x0_tree = spec.unravel(x_t)
+        m_tree = spec.unravel(m_t, dtype=cfg.momentum_dtype)
+
+        cohort_cst = cohort_cst_tree = None
+        if algo.needs_client_state:
+            if cfg.use_fused_kernel:  # (N, P) plane: ONE gather
+                cohort_cst = self._constrain_cohort(fstate.client_states[ids])
+            else:  # leaf form, as the local steps consume it
+                cohort_cst_tree = self._constrain_cohort(
+                    jax.tree_util.tree_map(lambda a: a[ids], fstate.client_states)
+                )
+        full = None
+        if algo.needs_full_grad:
+            full = self._constrain_cohort(full_batches)
+
+        def one_client(cst_tree_i, cst_flat_i, batches_i, full_i):
+            return flat_client_update(
+                algo, cfg, self.loss_fn, spec, x_t, x0_tree, m_t, m_tree,
+                cst_tree_i, cst_flat_i, batches_i, eta_l,
+                full_grad_batch=full_i, unroll=self.analysis_unroll,
+            )
+
+        outs, losses = jax.vmap(one_client)(cohort_cst_tree, cohort_cst, batches, full)
+
+        # masked cohort means, reduced straight to flat (P,) buffers.
+        # jnp path: outs hold (C, *shape) leaf trees — contract per leaf and
+        # concatenate only the tiny means (materializing the full (C, P)
+        # plane costs more than it saves).  Kernel path: outs ARE (C, P)
+        # planes (the fused server kernel streams them once).  Unused
+        # planes are None — never materialized, never reduced (the tree
+        # path pays for both).
+        w = mask.astype(jnp.float32)
+        n_active = jnp.sum(w)
+        agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
+        use_kernel = cfg.use_fused_kernel
+
+        def leaf_mean(a):
+            return (
+                jnp.tensordot(w.astype(agg_dt), a.astype(agg_dt), axes=(0, 0))
+                .astype(jnp.float32) / n_active
+            )
+
+        def pmean(x):
+            if x is None:
+                return None
+            if use_kernel:  # (C, P) plane
+                return leaf_mean(x)
+            return ravel_leaves(
+                [leaf_mean(l) for l in jax.tree_util.tree_leaves(x)], jnp.float32
+            )
+
+        fsrv = fstate.server
+        if use_kernel and algo.name in ("fedavg", "fedcm", "scaffold", "mimelite"):
+            new_params, new_momentum, mean_delta = self._fused_server_update(
+                algo, outs, w, n_active, x_t, m_t, eta_l
+            )
+            new_server = ServerState(new_momentum, fsrv.second_moment, fsrv.round + 1)
+        else:
+            mean_delta = pmean(outs.delta)
+            new_params, new_server = algo.server_update(
+                cfg, x_t, fsrv, mean_delta, pmean(outs.state_delta),
+                pmean(outs.extra), n_active, eta_l,
+            )
+
+        # scatter updated client states back (only active cohort members):
+        # ONE scatter on the (N, P) plane (kernel path) or per-leaf like
+        # the tree oracle (jnp path)
+        new_cst = fstate.client_states
+        if algo.needs_client_state:
+            if use_kernel:
+                upd = cohort_cst + outs.state_delta * w[:, None]
+                new_cst = fstate.client_states.at[ids].set(upd)
+            else:
+                def scatter(a, d):
+                    upd = a[ids] + d * w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
+                    return a.at[ids].set(upd)
+
+                new_cst = jax.tree_util.tree_map(
+                    scatter, fstate.client_states, outs.state_delta
+                )
+
+        pay = self._payload_from_nbytes(spec.nbytes)
+        metrics = RoundMetrics(
+            loss=jnp.sum(losses * w) / n_active,
+            n_active=n_active,
+            delta_norm=_flat_norm(mean_delta),
+            momentum_norm=_flat_norm(m_t),
+            eta_l=eta_l,
+            bytes_down=n_active * jnp.float32(pay["down_per_client"]),
+            bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+        )
+        return FedState(new_params, new_server, new_cst, fstate.rng), metrics
+
+    def _fused_server_update(self, algo, outs, w, n_active, x_t, m_t, eta_l):
+        """Round-close via the fused server kernel: masked mean + momentum
+        EMA + param step in one pass over the (C, P) plane (two passes for
+        the algorithms that EMA a second plane)."""
+        cfg = self.cfg
+        wn = w / n_active
+        # honor cfg.aggregate_dtype exactly like the jnp paths: the uplink
+        # planes are quantized BEFORE the reduction (the kernel body then
+        # accumulates in f32).  Only the reduction inputs are cast — the
+        # client-state scatter keeps the unquantized plane, as the tree
+        # oracle does.
+        agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
+
+        def q(plane):
+            return plane if agg_dt == jnp.float32 else plane.astype(agg_dt)
+        if algo.name in ("fedavg", "fedcm"):
+            # m' := Δ_{t+1} = −mean/(η_l·K);  x' = x + η_g·mean
+            s = -1.0 / (eta_l * cfg.local_steps)
+            m_dt = jnp.dtype(cfg.momentum_dtype) if algo.name == "fedcm" else jnp.float32
+            return fused_server_step(
+                q(outs.delta), wn, x_t, m_t, 0.0, s, cfg.eta_g, m_dtype=m_dt
+            )
+        if algo.name == "scaffold":
+            new_x, _, mean_delta = fused_server_step(
+                q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g
+            )
+            frac = n_active / cfg.num_clients
+            _, new_c, _ = fused_server_step(
+                q(outs.state_delta), wn, x_t, m_t, 1.0, frac, 0.0,
+                m_dtype=jnp.float32,
+            )
+            return new_x, new_c, mean_delta
+        # mimelite: x from the delta plane, m EMA from the full-batch grads
+        new_x, _, mean_delta = fused_server_step(
+            q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g
+        )
+        _, new_m, _ = fused_server_step(
+            q(outs.extra), wn, x_t, m_t, 1.0 - cfg.alpha, cfg.alpha, 0.0,
+            m_dtype=jnp.float32,
+        )
+        return new_x, new_m, mean_delta
+
     # -------------------------------------------------- round
     def _round_step_impl(self, state: FedState, batches, ids, mask, full_batches):
+        if self.cfg.use_flat_plane:
+            spec = FlatSpec.from_tree(state.params)
+            fstate = self._ravel_state(state, spec)
+            fstate, metrics = self._flat_round_step(
+                fstate, batches, ids, mask, full_batches, spec
+            )
+            return self._unravel_state(fstate, spec), metrics
+        return self._tree_round_step(state, batches, ids, mask, full_batches)
+
+    def _tree_round_step(self, state: FedState, batches, ids, mask, full_batches):
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, state.server.round)
 
@@ -379,7 +684,12 @@ class FederatedEngine:
         axis.  Numerically equivalent to calling ``run_round`` ``n_rounds``
         times (same rng threading, same ``_round_step_impl``); the
         equivalence test in tests/test_run_rounds.py holds all algorithms
-        to that.
+        to that.  Caveat for sub-f32 param leaves on the flat plane: this
+        fused form carries one f32 master plane across all N rounds and
+        rounds to the leaf dtype once at the end, while ``run_round``
+        re-rounds at every round boundary — bf16 trajectories agree to
+        bf16 precision per round, not bitwise (f32 params are exact either
+        way).
 
         The input ``state`` may be donated to the computation — use the
         returned state, not the argument, afterwards.
@@ -391,9 +701,22 @@ class FederatedEngine:
     def _run_rounds_impl(self, state: FedState, client_x, client_y, n_rounds: int):
         self.run_rounds_traces += 1  # python side effect: counts traces only
 
+        if self.cfg.use_flat_plane:
+            # ravel ONCE for the whole N-round program; the scan carries
+            # (P,)/(N,P) planes and unravels once at the end
+            spec = FlatSpec.from_tree(state.params)
+            fstate = self._ravel_state(state, spec)
+
+            def flat_body(st, _):
+                st, batches, ids, mask, full = self._prepare_round(st, client_x, client_y)
+                return self._flat_round_step(st, batches, ids, mask, full, spec)
+
+            fstate, metrics = jax.lax.scan(flat_body, fstate, None, length=n_rounds)
+            return self._unravel_state(fstate, spec), metrics
+
         def body(st, _):
             st, batches, ids, mask, full = self._prepare_round(st, client_x, client_y)
-            return self._round_step_impl(st, batches, ids, mask, full)
+            return self._tree_round_step(st, batches, ids, mask, full)
 
         return jax.lax.scan(body, state, None, length=n_rounds)
 
@@ -411,26 +734,51 @@ def _tree_norm(t):
     return jnp.sqrt(sum(leaves)) if leaves else jnp.float32(0.0)
 
 
+def _flat_norm(x):
+    """‖x‖₂ of one flat plane — same formulation as ``_tree_norm`` so flat
+    and tree metrics agree bitwise for single-buffer input."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
 # ----------------------------------------------------------------------
 # evaluation
 # ----------------------------------------------------------------------
 
 
 def make_eval_fn(predict_fn: Callable[[Any, Any], jax.Array], batch_size: int = 1000):
-    """predict_fn(params, x) -> logits.  Returns eval(params, x, y) -> acc."""
+    """predict_fn(params, x) -> logits.  Returns eval(params, x, y) -> acc.
+
+    Device-resident: the whole test set is evaluated by ONE jitted
+    ``lax.map`` over padded ``(n_batches, B, …)`` batches — a single
+    dispatch and a single device→host sync per call, instead of one of each
+    per 1000 examples.  (The old per-batch python loop stalled ``fed_train``
+    between fused ``run_rounds`` chunks.)  Padding rows carry zero weight,
+    so the returned accuracy is exact for any n.  Retraces only when the
+    padded shape changes, i.e. once per dataset.
+    """
 
     @jax.jit
-    def eval_batch(params, x, y):
-        logits = predict_fn(params, x)
-        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    def _evaluate(params, xb, yb, wb):
+        def one(args):
+            x, y, w = args
+            logits = predict_fn(params, x)
+            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32) * w)
+
+        hits = jax.lax.map(one, (xb, yb, wb))
+        return jnp.sum(hits) / jnp.sum(wb)
 
     def evaluate(params, x, y):
+        x, y = jnp.asarray(x), jnp.asarray(y)
         n = x.shape[0]
-        accs, ws = [], []
-        for i in range(0, n, batch_size):
-            xb, yb = x[i : i + batch_size], y[i : i + batch_size]
-            accs.append(float(eval_batch(params, xb, yb)))
-            ws.append(len(xb))
-        return float(sum(a * w for a, w in zip(accs, ws)) / sum(ws))
+        nb = max(1, -(-n // batch_size))
+        pad = nb * batch_size - n
+        xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        yp = jnp.pad(y, ((0, pad),))
+        w = (jnp.arange(nb * batch_size) < n).astype(jnp.float32)
+
+        def rs(a):
+            return a.reshape((nb, batch_size) + a.shape[1:])
+
+        return float(_evaluate(params, rs(xp), rs(yp), rs(w)))
 
     return evaluate

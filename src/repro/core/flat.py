@@ -1,0 +1,137 @@
+"""The flat parameter plane: ravel a pytree ONCE, compute on one buffer.
+
+Every update FedCM (and each baseline) performs — the client blend
+``v = α·g + (1−α)·Δ_t``, SCAFFOLD's ``g − c_i + c``, the masked cohort
+mean, the server momentum/param step — is elementwise over the parameter
+vector.  The pytree structure only matters to the *loss function*; carrying
+it through the update phase costs a tree_map dispatch per leaf per op and,
+on the fused-kernel path, a full concatenate/split round-trip per local
+step.  ``FlatSpec`` fixes the representation instead:
+
+* ``ravel(tree)``      → ONE contiguous ``(P,)`` buffer (default f32),
+* ``unravel(flat)``    → the original tree (shapes AND dtypes restored) —
+  leaves are slices of the buffer, essentially free under jit,
+* ``view_leaf(flat, key)`` → a single leaf without materializing the tree.
+
+The layout is the static offset table ``spec.leaves`` (path, shape, dtype,
+offset, size) in treedef order, no alignment padding — kernels pad the
+*tail* of the whole plane to their block size instead (see
+``src/repro/kernels/README.md``).  Buffers with leading batch axes reuse the
+same table: a cohort delta plane is ``(C, P)``, stacked per-client control
+variates are ``(N, P)``; ``unravel`` restores ``(..., *shape)`` leaves.
+
+``FederatedEngine`` ravels params/momentum/client-state once per
+``run_rounds`` call and carries the planes through the local-step scan, the
+cohort vmap, aggregation, and the server update (``cfg.use_flat_plane``;
+the tree path remains as the numerical oracle).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.trees import ravel_leaves, split_flat
+
+
+class LeafSpec(NamedTuple):
+    """Static layout of one leaf inside the flat plane."""
+
+    path: str  # jax.tree_util.keystr of the leaf's key path
+    shape: Tuple[int, ...]
+    dtype: Any  # numpy dtype (hashable)
+    offset: int  # first element in the plane
+    size: int  # number of elements
+
+
+class FlatSpec:
+    """Static per-leaf offset/shape/dtype table for one pytree structure.
+
+    Hashable and comparable so it can serve as (part of) a jit cache key;
+    building one is pure python and happens at trace time.
+    """
+
+    __slots__ = ("treedef", "leaves", "size")
+
+    def __init__(self, treedef, leaves: Tuple[LeafSpec, ...]):
+        self.treedef = treedef
+        self.leaves = leaves
+        self.size = (leaves[-1].offset + leaves[-1].size) if leaves else 0
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_tree(cls, tree, require_float: bool = True) -> "FlatSpec":
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs, off = [], 0
+        for path, leaf in flat:
+            dt = np.dtype(leaf.dtype)
+            if require_float and not jnp.issubdtype(dt, jnp.floating):
+                raise TypeError(
+                    f"flat plane requires floating leaves; "
+                    f"{jax.tree_util.keystr(path)} has dtype {dt} "
+                    f"(set cfg.use_flat_plane=False for non-float params)"
+                )
+            size = math.prod(leaf.shape)
+            specs.append(
+                LeafSpec(jax.tree_util.keystr(path), tuple(leaf.shape), dt, off, size)
+            )
+            off += size
+        return cls(treedef, tuple(specs))
+
+    # ------------------------------------------------------------- ravel
+    def ravel(self, tree, dtype=jnp.float32, batch_dims: int = 0) -> jax.Array:
+        """Tree → one contiguous ``(*lead, P)`` buffer in ``dtype``.
+
+        ``batch_dims`` leading axes of every leaf (e.g. the stacked-client
+        axis of ``(N, *shape)`` state) are preserved in front of the plane
+        axis.  This is the ONE concatenate of the flat engine — everything
+        downstream operates on the buffer.
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        return ravel_leaves(leaves, dtype=dtype, batch_dims=batch_dims)
+
+    def unravel(self, flat: jax.Array, dtype=None):
+        """Buffer ``(*lead, P)`` → tree of ``(*lead, *shape)`` leaves.
+
+        Leaf dtypes are restored from the table (pass ``dtype`` to override,
+        e.g. a uniform momentum dtype).  Under jit the slices fuse into
+        their consumers — no per-step copy.
+        """
+        dtypes = [dtype or l.dtype for l in self.leaves]
+        leaves = split_flat(flat, [l.shape for l in self.leaves], dtypes)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def view_leaf(self, flat: jax.Array, key: Union[int, str], dtype=None):
+        """One leaf of the plane by index or key path, without the tree."""
+        if isinstance(key, str):
+            matches = [i for i, l in enumerate(self.leaves) if l.path == key]
+            if not matches:
+                raise KeyError(f"no leaf {key!r}; paths: {[l.path for l in self.leaves]}")
+            key = matches[0]
+        spec = self.leaves[key]
+        seg = jax.lax.slice_in_dim(flat, spec.offset, spec.offset + spec.size, axis=-1)
+        seg = seg.reshape(*flat.shape[:-1], *spec.shape)
+        return seg.astype(dtype or spec.dtype)
+
+    # ------------------------------------------------------------- misc
+    @property
+    def nbytes(self) -> int:
+        """Bytes of the ORIGINAL tree (per-leaf dtypes) — payload accounting
+        must charge the wire format, not the f32 compute plane."""
+        return sum(l.size * l.dtype.itemsize for l in self.leaves)
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, FlatSpec)
+            and self.treedef == other.treedef
+            and self.leaves == other.leaves
+        )
+
+    def __hash__(self) -> int:
+        return hash((self.treedef, self.leaves))
+
+    def __repr__(self) -> str:
+        return f"FlatSpec(n_leaves={len(self.leaves)}, size={self.size})"

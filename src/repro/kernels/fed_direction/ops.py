@@ -1,0 +1,55 @@
+"""jit'd dispatch from algorithm name to the generalized direction kernel.
+
+``flat_direction_step`` is the flat engine's fused local step: given the
+flat plane buffers it builds the (η_l, c_g, c_x, c_aux...) coefficient
+vector for the algorithm and launches ONE kernel pass — no per-step
+concatenate/split, the buffers already ARE flat.
+
+Coverage: fedcm, mimelite (blend), scaffold (control variates), feddyn
+(proximal + dual), fedavg/fedadam (plain SGD step).  The affine forms are
+documented in kernel.py; feddyn's is distributed (``a·x − a·x_t`` instead
+of ``a·(x − x_t)``), a tolerance-level reassociation covered by its sweep
+test.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fed_direction.kernel import fed_direction_flat
+
+# CPU container: interpret mode (executes the kernel body in python).
+# On a real TPU runtime set INTERPRET=False.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _coefs(eta_l, c_g, c_x, *c_aux):
+    return jnp.stack(
+        [jnp.asarray(c, jnp.float32) for c in (eta_l, c_g, c_x, *c_aux)]
+    )
+
+
+def flat_direction_step(algo_name, cfg, x, g, m, cst, x0, eta_l):
+    """One fused local step x ← x − η_l·v on flat (P,) buffers.
+
+    ``m`` is the broadcast buffer (Δ_t for fedcm/mimelite, c for scaffold
+    rides inside ``cst``), ``cst`` the per-client state ((c_i, c) tuple for
+    scaffold, λ_i for feddyn, None otherwise), ``x0`` the round anchor x_t.
+    """
+    if algo_name in ("fedcm", "mimelite"):
+        auxes = (m,)
+        coefs = _coefs(eta_l, cfg.alpha, 0.0, 1.0 - cfg.alpha)
+    elif algo_name == "scaffold":
+        c_i, c = cst
+        auxes = (c_i, c)
+        coefs = _coefs(eta_l, 1.0, 0.0, -1.0, 1.0)
+    elif algo_name == "feddyn":
+        auxes = (cst, x0)
+        a = cfg.feddyn_alpha
+        coefs = _coefs(eta_l, 1.0, a, -1.0, -a)
+    elif algo_name in ("fedavg", "fedadam"):
+        auxes = ()
+        coefs = _coefs(eta_l, 1.0, 0.0)
+    else:
+        raise KeyError(f"no fused direction form for algorithm {algo_name!r}")
+    return fed_direction_flat(x, g, auxes, coefs, interpret=INTERPRET)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the generalized fused local step.
+
+    v = c_g·g + c_x·x + Σ_j c_j·aux_j
+    x_new = x − η_l·v
+
+with coefs = (η_l, c_g, c_x, c_aux...) exactly as the kernel consumes them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fed_direction_ref(x, g, auxes, coefs):
+    coefs = coefs.astype(jnp.float32)
+    v = coefs[1] * g.astype(jnp.float32) + coefs[2] * x.astype(jnp.float32)
+    for j, a in enumerate(auxes):
+        v = v + coefs[3 + j] * a.astype(jnp.float32)
+    return (x.astype(jnp.float32) - coefs[0] * v).astype(x.dtype)

@@ -5,6 +5,19 @@ ravels an entire parameter pytree into ONE flat kernel launch — for
 ResNet/transformer-sized clients this turns dozens of small elementwise ops
 into a single bandwidth-saturating pass (small leaves would otherwise never
 amortize kernel launch + tiling overheads).
+
+Dtype fidelity: ``g``/``delta`` are passed to the kernel in THEIR OWN
+dtypes — the kernel body upcasts to f32, blends, and only the output is
+downcast to the params dtype.  (Pre-casting the f32 momentum to bf16 params
+before the launch, as an earlier revision did, silently truncated the
+momentum the body was about to upcast anyway; tests/test_kernels.py keeps a
+bf16 regression for it.)
+
+These wrappers remain the tree-path kernel route.  The flat engine
+(``repro.core.flat``) never calls them inside the local-step scan — the
+plane is ravelled once per ``run_rounds`` and ``fed_direction`` runs
+directly on it, so the per-step concatenate/split here disappears from the
+hot path entirely.
 """
 from __future__ import annotations
 
@@ -12,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fedcm_update.kernel import fedcm_step_flat
+from repro.utils.trees import ravel_leaves, split_flat
 
 # CPU container: interpret mode (executes the kernel body in python).
 # On a real TPU runtime set INTERPRET=False.
@@ -22,7 +36,7 @@ def fedcm_step(x, g, delta, alpha, eta_l):
     """x ← x − η_l·(α·g + (1−α)·Δ) for one array (any shape/dtype)."""
     shape = x.shape
     out = fedcm_step_flat(
-        x.reshape(-1), g.reshape(-1).astype(x.dtype), delta.reshape(-1).astype(x.dtype),
+        x.reshape(-1), g.reshape(-1), delta.reshape(-1),
         alpha, eta_l, interpret=INTERPRET,
     )
     return out.reshape(shape)
@@ -33,14 +47,11 @@ def fedcm_step_tree(params, grads, momentum, alpha, eta_l):
     leaves, treedef = jax.tree_util.tree_flatten(params)
     g_leaves = treedef.flatten_up_to(grads)
     m_leaves = treedef.flatten_up_to(momentum)
-    flat_x = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    flat_g = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in g_leaves])
-    flat_m = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in m_leaves])
+    flat_x = ravel_leaves(leaves, dtype=jnp.float32)
+    # momentum/grads keep full f32 precision into the kernel regardless of
+    # the params dtype; only the output is rounded back per leaf
+    flat_g = ravel_leaves(g_leaves, dtype=jnp.float32)
+    flat_m = ravel_leaves(m_leaves, dtype=jnp.float32)
     out = fedcm_step_flat(flat_x, flat_g, flat_m, alpha, eta_l, interpret=INTERPRET)
-    news = []
-    off = 0
-    for l in leaves:
-        n = l.size
-        news.append(out[off : off + n].reshape(l.shape).astype(l.dtype))
-        off += n
+    news = split_flat(out, [l.shape for l in leaves], [l.dtype for l in leaves])
     return jax.tree_util.tree_unflatten(treedef, news)

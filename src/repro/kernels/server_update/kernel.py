@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused server update over the (C, P) delta plane.
+
+The server's round-close is three chained reductions/maps over
+cohort-stacked flat planes:
+
+    mean  = Σ_c wn_c · Δ_c            (masked cohort mean; wn = mask/|S|)
+    m'    = c_mm·m + c_md·mean        (momentum EMA / pseudo-grad store)
+    x'    = x + c_xd·mean             (server param step)
+
+Unfused that is one pass over the (C, P) plane for the mean plus two more
+params-sized read/write pairs with the mean materialized in between; this
+kernel streams the plane once per element-column, keeps the mean in VMEM,
+and writes (x', m', mean) in the same pass — the whole server phase becomes
+one roofline-memory-term trip over C+2 reads and 3 writes per plane column.
+
+Coefficient mapping (see core/engine.py):
+* fedavg/fedcm : c_mm=0, c_md=−1/(η_l·K), c_xd=η_g      (m' := Δ_{t+1})
+* scaffold     : params pass (1, 0, η_g) over Δ, then the c-EMA pass
+  (1, |S|/N, 0) over Δc — the x/m slots carry whichever buffer updates.
+* mimelite     : params pass (1, 0, η_g) over Δ, momentum pass
+  (1−α, α, 0) over the full-batch-grad plane.
+
+Tiling: planes are padded to a multiple of ``block_elems`` and viewed as
+(padded//LANE, LANE); the delta plane blocks as (C, rows, LANE) — the whole
+cohort column is resident per grid step (C is a cohort, 8–64, so a block is
+C·256 KiB of VMEM at the default; shrink ``block_elems`` for huge cohorts).
+``wn`` is lane-padded to (C, LANE) (column 0 live) instead of an unaligned
+(C, 1) operand; coefficients ride in SMEM as a (1, 3) row since two of them
+are traced per-round values.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK = 16 * 1024  # per-client elements per grid step
+
+
+def _kernel(coef_ref, wn_ref, d_ref, x_ref, m_ref, newx_ref, newm_ref, mean_ref):
+    c_mm = coef_ref[0, 0]
+    c_md = coef_ref[0, 1]
+    c_xd = coef_ref[0, 2]
+    wn = wn_ref[...][:, 0].astype(jnp.float32)  # (C,) mask/|S| weights
+    d = d_ref[...].astype(jnp.float32)  # (C, rows, LANE)
+    mean = jnp.sum(d * wn[:, None, None], axis=0)  # (rows, LANE)
+    x = x_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    new_m = c_mm * m + c_md * mean
+    mean_ref[...] = mean
+    newm_ref[...] = new_m.astype(newm_ref.dtype)
+    newx_ref[...] = (x + c_xd * mean).astype(newx_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("m_dtype", "block_elems", "interpret"))
+def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
+                       block_elems: int = DEFAULT_BLOCK, interpret: bool = True):
+    """deltas: (C, P); wn: (C,) premultiplied mask/|S| weights; x, m: (P,);
+    coefs: (3,) f32 (c_mm, c_md, c_xd).  Returns (new_x, new_m, mean) with
+    new_m in ``m_dtype`` (default m.dtype) and mean in f32."""
+    C, n = deltas.shape
+    m_dt = jnp.dtype(m_dtype) if m_dtype is not None else m.dtype
+    rows = block_elems // LANE
+    padded = pl.cdiv(n, block_elems) * block_elems
+    pad = padded - n
+
+    def prep(a):
+        a = jnp.pad(a, (0, pad))
+        return a.reshape(padded // LANE, LANE)
+
+    dr = jnp.pad(deltas, ((0, 0), (0, pad))).reshape(C, padded // LANE, LANE)
+    xr, mr = prep(x), prep(m)
+    wn_l = jnp.zeros((C, LANE), jnp.float32).at[:, 0].set(wn.astype(jnp.float32))
+    nblocks = padded // block_elems
+
+    vec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    plane = pl.BlockSpec((C, rows, LANE), lambda i: (0, i, 0))
+    smem = pl.BlockSpec((1, 3), lambda i: (0, 0))
+    wspec = pl.BlockSpec((C, LANE), lambda i: (0, 0))
+    new_x, new_m, mean = pl.pallas_call(
+        _kernel,
+        grid=(nblocks,),
+        in_specs=[smem, wspec, plane, vec, vec],
+        out_specs=[vec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct(xr.shape, x.dtype),
+            jax.ShapeDtypeStruct(mr.shape, m_dt),
+            jax.ShapeDtypeStruct(xr.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(coefs.astype(jnp.float32).reshape(1, 3), wn_l, dr, xr, mr)
+    return (
+        new_x.reshape(padded)[:n],
+        new_m.reshape(padded)[:n],
+        mean.reshape(padded)[:n],
+    )

@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the fused server round-close kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.server_update.kernel import server_update_flat
+
+# CPU container: interpret mode (executes the kernel body in python).
+# On a real TPU runtime set INTERPRET=False.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None):
+    """Masked cohort mean + momentum EMA + param step, one pass over (C, P).
+
+    deltas (C, P), wn (C,) = mask/|S|, x (P,), m (P,).  Coefficients may be
+    traced per-round scalars.  Returns (new_x, new_m, mean_delta).
+    """
+    coefs = jnp.stack([
+        jnp.asarray(c_mm, jnp.float32),
+        jnp.asarray(c_md, jnp.float32),
+        jnp.asarray(c_xd, jnp.float32),
+    ])
+    return server_update_flat(
+        deltas, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET
+    )

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused server update.
+
+    mean = Σ_c wn_c · Δ_c
+    m'   = c_mm·m + c_md·mean
+    x'   = x + c_xd·mean
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def server_update_ref(deltas, wn, x, m, coefs, m_dtype=None):
+    coefs = coefs.astype(jnp.float32)
+    mean = jnp.sum(
+        deltas.astype(jnp.float32) * wn.astype(jnp.float32)[:, None], axis=0
+    )
+    new_m = coefs[0] * m.astype(jnp.float32) + coefs[1] * mean
+    new_x = (x.astype(jnp.float32) + coefs[2] * mean).astype(x.dtype)
+    return new_x, new_m.astype(m_dtype or m.dtype), mean

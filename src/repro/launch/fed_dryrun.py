@@ -70,6 +70,10 @@ def build_and_lower(
         alpha=0.1, eta_l=0.05, eta_g=1.0, participation="fixed",
         weight_decay=1e-4, momentum_dtype=momentum_dtype,
         aggregate_dtype=aggregate_dtype,
+        # this dry-run tensor-shards each client's params over "model"; the
+        # flat plane would concatenate model-sharded leaves (all-gathers),
+        # so the per-leaf tree path is the right lowering here
+        use_flat_plane=False,
     )
     eng = FederatedEngine(fed, loss_fn)
     eng.analysis_unroll = True

@@ -3,8 +3,16 @@
 All federated algorithms in ``repro.core`` are expressed as pytree algebra
 (model deltas, momenta, control variates).  These helpers keep that algebra
 readable and are jit-safe.
+
+``ravel_leaves`` / ``split_flat`` are the low-level flat-plane primitives:
+one contiguous buffer per pytree, leaves laid out back-to-back in treedef
+order.  ``repro.core.flat.FlatSpec`` builds the static offset/shape/dtype
+table on top of them; the Pallas kernel wrappers use them directly.
 """
 from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +68,45 @@ def tree_size(a) -> int:
 def tree_bytes(a) -> int:
     """Total bytes across leaves."""
     return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))
+
+
+def ravel_leaves(leaves, dtype=jnp.float32, batch_dims: int = 0):
+    """Concatenate ``leaves`` into ONE contiguous 1-D (or batched) buffer.
+
+    ``batch_dims`` leading axes are preserved (e.g. 1 for stacked per-client
+    state ``(N, *shape)`` → ``(N, P)``); everything after them is flattened
+    and cast to ``dtype``.  Leaves with zero elements contribute nothing.
+    """
+    if not leaves:
+        return jnp.zeros((0,), dtype)
+    segs = [
+        l.reshape(*l.shape[:batch_dims], -1).astype(dtype) for l in leaves
+    ]
+    if len(segs) == 1:
+        return segs[0]
+    return jnp.concatenate(segs, axis=-1)
+
+
+def split_flat(flat, shapes: Sequence[Tuple[int, ...]], dtypes=None):
+    """Inverse of :func:`ravel_leaves`: slice a flat buffer back into leaves.
+
+    ``flat`` may carry leading batch axes — only the LAST axis is the plane
+    axis.  Each slice is reshaped to ``(*lead, *shape)`` and cast to the
+    matching entry of ``dtypes`` (or left in the plane dtype when None).
+    Slices of one buffer are cheap under jit (no copy until fused consumers
+    need one), which is what makes per-step unravel essentially free.
+    """
+    lead = flat.shape[:-1]
+    out, off = [], 0
+    for i, shape in enumerate(shapes):
+        n = math.prod(shape)
+        seg = jax.lax.slice_in_dim(flat, off, off + n, axis=-1)
+        seg = seg.reshape(*lead, *shape)
+        if dtypes is not None:
+            seg = seg.astype(dtypes[i])
+        out.append(seg)
+        off += n
+    return out
 
 
 def tree_cast(a, dtype):

@@ -128,3 +128,37 @@ def test_round_metrics_fields():
     assert int(m.n_active) == 3
     assert float(m.eta_l) == pytest.approx(0.1, rel=1e-5)
     assert float(m.bytes_down) == 2 * float(m.bytes_up)  # fedcm asymmetry
+
+
+def test_make_eval_fn_exact_and_device_resident():
+    """The lax.map eval must (a) return the exact full-dataset accuracy for
+    ragged n, and (b) trace the predict_fn a constant number of times — NOT
+    once per batch per call like the old host loop."""
+    from repro.core import make_eval_fn
+
+    model = mlp_classifier((8, 16, 4))
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(137, 8)), jnp.float32)  # 137 % 50 != 0
+    y = jnp.asarray(rng.integers(0, 4, size=(137,)), jnp.int32)
+
+    calls = {"n": 0}
+
+    def counting_apply(p, xb):
+        calls["n"] += 1  # python-level: only incremented while TRACING
+        return model.apply(p, xb)
+
+    evaluate = make_eval_fn(counting_apply, batch_size=50)
+    acc = evaluate(params, x, y)
+    ref = float(jnp.mean((jnp.argmax(model.apply(params, x), -1) == y)
+                         .astype(jnp.float32)))
+    assert acc == pytest.approx(ref, abs=1e-6)
+    traces_after_first = calls["n"]
+    for _ in range(3):
+        assert evaluate(params, x, y) == pytest.approx(ref, abs=1e-6)
+    assert calls["n"] == traces_after_first  # cached: zero retraces
+    # padding rows carry zero weight: a batch-multiple n agrees with itself
+    acc100 = evaluate(params, x[:100], y[:100])
+    ref100 = float(jnp.mean((jnp.argmax(model.apply(params, x[:100]), -1) == y[:100])
+                            .astype(jnp.float32)))
+    assert acc100 == pytest.approx(ref100, abs=1e-6)

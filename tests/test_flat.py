@@ -1,0 +1,238 @@
+"""Flat parameter-plane engine (core/flat.py + engine flat path) tests.
+
+* FlatSpec: ravel/unravel round-trips (shapes, dtypes, scalar leaves,
+  stacked leading axes), view_leaf addressing, nbytes accounting, hashing.
+* Engine equivalence: the flat-plane trajectory must match the tree-path
+  oracle bitwise-close (well inside the atol ≤ 1e-5 acceptance bar) for
+  EVERY algorithm, stateful ones included.
+* Donation: run_rounds donates its input state; the returned trajectory
+  must be stable when the donated buffers get recycled by later calls.
+* Mixed bf16/f32 trees survive the flat round trip.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine, FlatSpec
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+RNG = np.random.default_rng(0)
+
+
+# ----------------------------------------------------------------------
+# FlatSpec unit tests
+# ----------------------------------------------------------------------
+
+
+def _mixed_tree():
+    return {
+        "a": jnp.asarray(RNG.normal(size=(13, 7)), jnp.float32),
+        "b": [
+            jnp.asarray(RNG.normal(size=(5,)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(2, 3)), jnp.bfloat16),
+        ],
+        "scalar": jnp.float32(3.5),
+    }
+
+
+def test_flatspec_roundtrip_shapes_dtypes():
+    tree = _mixed_tree()
+    spec = FlatSpec.from_tree(tree)
+    assert spec.size == 13 * 7 + 5 + 6 + 1
+    flat = spec.ravel(tree)
+    assert flat.shape == (spec.size,) and flat.dtype == jnp.float32
+    back = spec.unravel(flat)
+    for o, r in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        assert o.shape == r.shape and o.dtype == r.dtype
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=1e-2, atol=1e-2
+        )
+    # f32 leaves round-trip bitwise
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(back["a"]))
+
+
+def test_flatspec_stacked_batch_dims():
+    tree = {"w": jnp.asarray(RNG.normal(size=(4, 3, 2)), jnp.float32),
+            "b": jnp.asarray(RNG.normal(size=(4, 5)), jnp.float32)}
+    # leading axis 4 = stacked clients; plane covers (3,2) and (5,)
+    per_client = {"w": jax.ShapeDtypeStruct((3, 2), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((5,), jnp.float32)}
+    spec = FlatSpec.from_tree(per_client)
+    plane = spec.ravel(tree, batch_dims=1)
+    assert plane.shape == (4, 11)
+    back = spec.unravel(plane)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]), np.asarray(tree["b"]))
+
+
+def test_flatspec_view_leaf_by_index_and_path():
+    tree = _mixed_tree()
+    spec = FlatSpec.from_tree(tree)
+    flat = spec.ravel(tree)
+    np.testing.assert_array_equal(np.asarray(spec.view_leaf(flat, 0)),
+                                  np.asarray(tree["a"]))
+    path = spec.leaves[0].path
+    np.testing.assert_array_equal(np.asarray(spec.view_leaf(flat, path)),
+                                  np.asarray(tree["a"]))
+    with pytest.raises(KeyError):
+        spec.view_leaf(flat, "nope")
+
+
+def test_flatspec_nbytes_matches_tree_bytes():
+    from repro.utils.trees import tree_bytes
+
+    tree = _mixed_tree()
+    assert FlatSpec.from_tree(tree).nbytes == tree_bytes(tree)
+
+
+def test_flatspec_rejects_int_leaves():
+    with pytest.raises(TypeError):
+        FlatSpec.from_tree({"i": jnp.arange(3)})
+
+
+def test_flatspec_hashable_and_eq():
+    t1, t2 = _mixed_tree(), _mixed_tree()
+    s1, s2 = FlatSpec.from_tree(t1), FlatSpec.from_tree(t2)
+    assert s1 == s2 and hash(s1) == hash(s2)
+    s3 = FlatSpec.from_tree({"a": t1["a"]})
+    assert s1 != s3
+
+
+def test_flatspec_empty_tree():
+    spec = FlatSpec.from_tree({})
+    assert spec.size == 0
+    assert spec.ravel({}).shape == (0,)
+
+
+# ----------------------------------------------------------------------
+# engine: flat plane vs tree-path oracle
+# ----------------------------------------------------------------------
+
+N_ROUNDS = 3
+
+
+def _setup(algo, **kw):
+    x, y, *_ = make_synthetic_classification(n_classes=4, dim=8, n_train=800, n_test=8)
+    model = mlp_classifier((8, 16, 4))
+    base = dict(algo=algo, num_clients=10, cohort_size=3, local_steps=2,
+                participation="fixed")
+    base.update(kw)
+    cfg = FedConfig(**base)
+    eng = FederatedEngine(cfg, classification_loss(model.apply), batch_size=8)
+    data = FederatedData(x, y, cfg.num_clients, seed=0)
+    return cfg, eng, data, model
+
+
+def _fresh(eng, model):
+    return eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+
+
+def _assert_close(a, b, atol=1e-5, rtol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize(
+    "algo", ["fedcm", "fedavg", "fedadam", "scaffold", "feddyn", "mimelite"]
+)
+def test_flat_plane_matches_tree_oracle(algo):
+    cfg, eng_flat, data, model = _setup(algo)
+    assert cfg.use_flat_plane  # flat is the default engine
+    eng_tree = FederatedEngine(
+        replace(cfg, use_flat_plane=False), eng_flat.loss_fn, batch_size=8
+    )
+    s_flat, m_flat = eng_flat.run_rounds(_fresh(eng_flat, model), data, N_ROUNDS)
+    s_tree, m_tree = eng_tree.run_rounds(_fresh(eng_tree, model), data, N_ROUNDS)
+    _assert_close(s_flat.params, s_tree.params)
+    _assert_close(s_flat.server.momentum, s_tree.server.momentum)
+    _assert_close(s_flat.server.second_moment, s_tree.server.second_moment)
+    if s_tree.client_states is not None:
+        _assert_close(s_flat.client_states, s_tree.client_states)
+        # treedef restored too: the flat engine must hand back a real tree
+        assert jax.tree_util.tree_structure(
+            s_flat.client_states
+        ) == jax.tree_util.tree_structure(s_tree.client_states)
+    np.testing.assert_allclose(np.asarray(m_flat.loss), np.asarray(m_tree.loss),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_flat.delta_norm),
+                               np.asarray(m_tree.delta_norm), rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(m_flat.n_active),
+                                  np.asarray(m_tree.n_active))
+    np.testing.assert_array_equal(np.asarray(m_flat.bytes_down),
+                                  np.asarray(m_tree.bytes_down))
+
+
+def test_flat_plane_per_round_matches_fused():
+    """ravel-per-round (run_round) and ravel-once (run_rounds) must agree:
+    the f32 plane round-trips through the tree losslessly between rounds."""
+    _, eng, data, model = _setup("scaffold")
+    st = _fresh(eng, model)
+    for _ in range(N_ROUNDS):
+        st, _ = eng.run_round(st, data)
+    fused, _ = eng.run_rounds(_fresh(eng, model), data, N_ROUNDS)
+    _assert_close(st.params, fused.params, atol=1e-6, rtol=2e-5)
+    _assert_close(st.client_states, fused.client_states, atol=1e-6, rtol=2e-5)
+
+
+def test_run_rounds_donation_safety():
+    """run_rounds donates its input: once the trajectory is returned, later
+    calls recycling those buffers must not corrupt it, and the returned
+    state must itself be usable as the next donated input."""
+    _, eng, data, model = _setup("fedcm")
+    out1, _ = eng.run_rounds(_fresh(eng, model), data, N_ROUNDS)
+    snap = [np.array(l) for l in jax.tree_util.tree_leaves(out1.params)]
+    # same shapes → jax may reuse the donated buffers of this second call
+    out2, _ = eng.run_rounds(_fresh(eng, model), data, N_ROUNDS)
+    for s, l in zip(snap, jax.tree_util.tree_leaves(out1.params)):
+        np.testing.assert_array_equal(s, np.asarray(l))
+    # identical seeds → identical trajectories
+    for a, b in zip(jax.tree_util.tree_leaves(out1.params),
+                    jax.tree_util.tree_leaves(out2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # chaining off the returned (donated-in) state works
+    out3, m3 = eng.run_rounds(out2, data, 2)
+    assert int(out3.server.round) == N_ROUNDS + 2
+    assert np.all(np.isfinite(np.asarray(m3.loss)))
+
+
+def test_flat_engine_bf16_mixed_param_tree():
+    """A params tree mixing bf16 and f32 leaves runs on the flat plane and
+    stays close to the tree path (bf16 tolerance: the plane carries f32
+    across local steps, the tree path re-rounds each step)."""
+
+    def loss_fn(params, batch):
+        d = params["w"].astype(jnp.float32) - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(d**2, -1)) + 0.5 * jnp.mean(
+            params["b"].astype(jnp.float32) ** 2
+        )
+
+    cfg = FedConfig(algo="fedcm", num_clients=4, cohort_size=2, local_steps=2,
+                    participation="fixed", weight_decay=0.0)
+    params = {
+        "w": jnp.asarray(RNG.normal(size=(6,)), jnp.bfloat16),
+        "b": jnp.asarray(RNG.normal(size=(3,)), jnp.float32),
+    }
+    eng = FederatedEngine(cfg, loss_fn, batch_size=2)
+    engt = FederatedEngine(replace(cfg, use_flat_plane=False), loss_fn, batch_size=2)
+
+    centers = jnp.asarray(RNG.normal(size=(4, 2, 6)), jnp.float32)  # (C, B, 6)
+    batches = {"c": jnp.broadcast_to(centers[:, None], (4, 2, 2, 6))}
+    ids, mask = jnp.arange(2), jnp.ones(2, bool)
+    st = eng.init(params, jax.random.PRNGKey(0))
+    stt = engt.init(params, jax.random.PRNGKey(0))
+    b2 = jax.tree_util.tree_map(lambda a: a[:2], batches)
+    new, _ = eng.round_step(st, b2, ids, mask)
+    newt, _ = engt.round_step(stt, b2, ids, mask)
+    assert new.params["w"].dtype == jnp.bfloat16
+    assert new.params["b"].dtype == jnp.float32
+    _assert_close(
+        jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), new.params),
+        jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), newt.params),
+        atol=2e-2, rtol=2e-2,
+    )

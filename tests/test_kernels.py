@@ -6,8 +6,13 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fed_direction.kernel import fed_direction_flat
+from repro.kernels.fed_direction.ops import flat_direction_step
+from repro.kernels.fed_direction.ref import fed_direction_ref
 from repro.kernels.fedcm_update.ops import fedcm_step, fedcm_step_tree
 from repro.kernels.fedcm_update.ref import fedcm_step_ref
+from repro.kernels.server_update.ops import fused_server_step
+from repro.kernels.server_update.ref import server_update_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.ssd_scan.ops import ssd
@@ -66,6 +71,175 @@ def test_fedcm_update_tree_matches_leafwise():
         np.testing.assert_allclose(
             np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=2e-2, atol=2e-2
         )
+
+
+def test_fedcm_update_bf16_params_keep_f32_momentum_precision():
+    """Regression (dtype fidelity): bf16 params with f32 g/Δ must match the
+    f32 reference — the old wrapper cast g/Δ to bf16 BEFORE the kernel,
+    truncating the momentum the kernel body was about to upcast anyway."""
+    x = jnp.asarray(RNG.normal(size=(4097,)), jnp.bfloat16)
+    g = jnp.asarray(RNG.normal(size=(4097,)), jnp.float32)
+    d = jnp.asarray(RNG.normal(size=(4097,)) * 1e-3, jnp.float32)
+    out = fedcm_step(x, g, d, 0.1, 0.05)
+    ref = fedcm_step_ref(x, g, d, 0.1, 0.05)  # blends in full f32
+    assert out.dtype == jnp.bfloat16
+    # the kernel must agree with the f32-blend reference EXACTLY (both round
+    # the same f32 value to bf16 once, at the end)
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32)
+    )
+
+
+def test_fedcm_update_scalar_and_single_element_leaves():
+    """Whole-tree launch with scalar () and single-element (1,) leaves —
+    the degenerate offsets/padding of the flat layout."""
+    tree = {"s": jnp.float32(2.0), "one": jnp.ones((1,), jnp.float32),
+            "m": jnp.asarray(RNG.normal(size=(9, 5)), jnp.float32)}
+    g = jax.tree_util.tree_map(jnp.ones_like, tree)
+    m = jax.tree_util.tree_map(lambda x: 0.25 * jnp.ones_like(x), tree)
+    out = fedcm_step_tree(tree, g, m, 0.3, 0.1)
+    ref = jax.tree_util.tree_map(
+        lambda x, gg, mm: fedcm_step_ref(x, gg, mm, 0.3, 0.1), tree, g, m)
+    for o, r in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(ref)):
+        assert o.shape == r.shape
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-6, atol=1e-6)
+
+
+def test_fedcm_update_empty_tail_padding_is_dropped():
+    """Non-block-multiple sizes: the padded tail must never leak into the
+    output (output length and values exact for n = 1 and n = block+1)."""
+    for n in (1, 64 * 1024 + 1):
+        x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+        g = jnp.ones((n,), jnp.float32)
+        d = jnp.zeros((n,), jnp.float32)
+        out = fedcm_step(x, g, d, 1.0, 0.5)
+        assert out.shape == (n,)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) - 0.5,
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# fed_direction (generalized fused local step)
+# ----------------------------------------------------------------------
+
+# (η, c_g, c_x, c_aux...) per algorithm family, exercising 0/1/2 aux buffers
+DIRECTION_CASES = [
+    ("sgd", 0, [0.05, 1.0, 0.0]),
+    ("blend", 1, [0.05, 0.1, 0.0, 0.9]),
+    ("scaffold", 2, [0.05, 1.0, 0.0, -1.0, 1.0]),
+    ("feddyn", 2, [0.05, 1.0, 0.01, -1.0, -0.01]),
+]
+
+
+@pytest.mark.parametrize("name,n_aux,coefs", DIRECTION_CASES)
+@pytest.mark.parametrize("n", [1, 5, 1023, 64 * 1024 + 3])
+def test_fed_direction_sweep(name, n_aux, coefs, n):
+    x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    auxes = tuple(jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+                  for _ in range(n_aux))
+    cf = jnp.asarray(coefs, jnp.float32)
+    out = fed_direction_flat(x, g, auxes, cf)
+    ref = fed_direction_ref(x, g, auxes, cf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fed_direction_mixed_dtype_operands(dtype):
+    """bf16 plane with f32 momentum (and vice versa): operands go in raw,
+    the body blends in f32, only the output is rounded to x.dtype."""
+    n = 777
+    x = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(n,)), jnp.bfloat16)
+    cf = jnp.asarray([0.1, 0.3, 0.0, 0.7], jnp.float32)
+    out = fed_direction_flat(x, g, (m,), cf)
+    ref = fed_direction_ref(x, g, (m,), cf)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flat_direction_step_algorithm_dispatch():
+    """ops-level dispatch builds the right affine form per algorithm."""
+    from repro.configs.base import FedConfig
+
+    n = 513
+    x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    c_i = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    x0 = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    lam = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    cfg = FedConfig(alpha=0.2, feddyn_alpha=0.05)
+    eta = jnp.float32(0.1)
+
+    cases = {
+        "fedcm": x - eta * (0.2 * g + 0.8 * m),
+        "fedavg": x - eta * g,
+        "scaffold": x - eta * (g - c_i + m),
+        "feddyn": x - eta * (g - lam + 0.05 * (x - x0)),
+    }
+    for name, ref in cases.items():
+        cst = (c_i, m) if name == "scaffold" else (lam if name == "feddyn" else None)
+        out = flat_direction_step(name, cfg, x, g, m, cst, x0, eta)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6, err_msg=name)
+    with pytest.raises(KeyError):
+        flat_direction_step("nope", cfg, x, g, m, None, x0, eta)
+
+
+# ----------------------------------------------------------------------
+# server_update (fused masked mean + momentum EMA + param step)
+# ----------------------------------------------------------------------
+
+SERVER_CASES = [
+    # (C, P) plane shapes incl. non-block-multiple and tiny planes
+    (1, 1),
+    (3, 129),
+    (8, 1000),
+    (5, 16 * 1024 + 7),
+]
+
+
+@pytest.mark.parametrize("C,P", SERVER_CASES)
+@pytest.mark.parametrize("masked", [False, True])
+def test_server_update_sweep(C, P, masked):
+    deltas = jnp.asarray(RNG.normal(size=(C, P)), jnp.float32)
+    mask = np.ones(C, bool)
+    if masked and C > 1:
+        mask[-1] = False
+    w = jnp.asarray(mask, jnp.float32)
+    wn = w / jnp.sum(w)
+    x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    out = fused_server_step(deltas, wn, x, m, 0.9, 0.1, -2.0)
+    coefs = jnp.asarray([0.9, 0.1, -2.0], jnp.float32)
+    ref = server_update_ref(deltas, wn, x, m, coefs)
+    for o, r in zip(out, ref):
+        assert o.shape == (P,)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-5, atol=2e-6)
+    # masked-out client must contribute nothing
+    if masked and C > 1:
+        garbage = deltas.at[-1].set(1e9)
+        out_g = fused_server_step(garbage, wn, x, m, 0.9, 0.1, -2.0)
+        for o, og in zip(out, out_g):
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(og))
+
+
+def test_server_update_momentum_dtype_override():
+    C, P = 4, 300
+    deltas = jnp.asarray(RNG.normal(size=(C, P)), jnp.float32)
+    wn = jnp.full((C,), 0.25, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    new_x, new_m, mean = fused_server_step(
+        deltas, wn, x, m, 0.0, -2.0, 1.0, m_dtype=jnp.bfloat16)
+    assert new_m.dtype == jnp.bfloat16
+    assert new_x.dtype == jnp.float32 and mean.dtype == jnp.float32
 
 
 # ----------------------------------------------------------------------

@@ -97,15 +97,57 @@ def test_run_rounds_rejects_nonpositive():
         eng.run_rounds(_fresh_state(eng, model), data, 0)
 
 
-@pytest.mark.parametrize("algo", ["fedcm", "mimelite"])
+@pytest.mark.parametrize(
+    "algo", ["fedcm", "mimelite", "fedavg", "fedadam", "scaffold", "feddyn"]
+)
 def test_fused_kernel_path_matches_reference(algo):
+    """Flat engine + Pallas kernels (fed_direction local steps, fused
+    server round-close where covered) vs the unfused jnp flat path."""
     cfg, eng, data, model = _setup(algo)
     engk = FederatedEngine(replace(cfg, use_fused_kernel=True), eng.loss_fn, batch_size=8)
     s_ref, m_ref = eng.run_rounds(_fresh_state(eng, model), data, 3)
     s_k, m_k = engk.run_rounds(_fresh_state(engk, model), data, 3)
-    _assert_trees_close(s_ref.params, s_k.params, rtol=1e-5, atol=1e-7)
-    _assert_trees_close(s_ref.server.momentum, s_k.server.momentum, rtol=1e-5, atol=1e-7)
+    _assert_trees_close(s_ref.params, s_k.params, rtol=1e-5, atol=1e-6)
+    _assert_trees_close(s_ref.server.momentum, s_k.server.momentum, rtol=1e-5, atol=1e-6)
+    if s_ref.client_states is not None:
+        _assert_trees_close(s_ref.client_states, s_k.client_states, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(m_ref.loss), np.asarray(m_k.loss), rtol=1e-5)
+
+
+def test_fused_server_kernel_honors_aggregate_dtype():
+    """Regression: the fused server kernel must quantize the uplink planes
+    with cfg.aggregate_dtype before reducing, like both jnp paths do."""
+    cfg, eng, data, model = _setup("fedcm")
+    cfg_bf = replace(cfg, aggregate_dtype="bfloat16")
+    engs = {
+        "jnp_bf16": FederatedEngine(cfg_bf, eng.loss_fn, batch_size=8),
+        "kern_bf16": FederatedEngine(replace(cfg_bf, use_fused_kernel=True),
+                                     eng.loss_fn, batch_size=8),
+        "kern_f32": FederatedEngine(replace(cfg, use_fused_kernel=True),
+                                    eng.loss_fn, batch_size=8),
+    }
+    out = {k: e.run_rounds(_fresh_state(e, model), data, 2)[0] for k, e in engs.items()}
+    # bf16 aggregation on the kernel path tracks the jnp bf16 path…
+    _assert_trees_close(out["kern_bf16"].params, out["jnp_bf16"].params,
+                        rtol=2e-2, atol=2e-2)
+    # …and actually differs from unquantized f32 aggregation
+    diff = sum(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(out["kern_bf16"].params),
+                        jax.tree_util.tree_leaves(out["kern_f32"].params))
+    )
+    assert diff > 0.0
+
+
+def test_tree_path_fused_kernel_still_matches():
+    """Legacy tree-path kernel route (fedcm_step_tree) stays correct."""
+    cfg, eng, data, model = _setup("fedcm")
+    cfg_t = replace(cfg, use_flat_plane=False)
+    eng_t = FederatedEngine(cfg_t, eng.loss_fn, batch_size=8)
+    eng_tk = FederatedEngine(replace(cfg_t, use_fused_kernel=True), eng.loss_fn, batch_size=8)
+    s_ref, _ = eng_t.run_rounds(_fresh_state(eng_t, model), data, 3)
+    s_k, _ = eng_tk.run_rounds(_fresh_state(eng_tk, model), data, 3)
+    _assert_trees_close(s_ref.params, s_k.params, rtol=1e-5, atol=1e-7)
 
 
 def test_client_sharding_constraint_is_numerically_inert():
