@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedcm_update.ops import fedcm_step
+from repro.kernels.fed_direction.kernel import fed_direction_flat
 from repro.kernels.fedcm_update.ref import fedcm_step_ref
 
 
@@ -35,20 +35,24 @@ def fedcm_update_accounting(n_params: int) -> dict:
 
 
 def main() -> int:
-    print("### fedcm_update fusion accounting (per local step)")
+    print("### fused local-step accounting (fed_direction blend, per local step)")
     for n in [1_000_000, 11_000_000, 390_000_000]:  # ~ResNet18 / ~llama3.2 emb / llama4
         acc = fedcm_update_accounting(n)
         print(f"  n={n:>11,d}  unfused={acc['unfused_bytes']/1e9:7.2f} GB  "
               f"fused={acc['fused_bytes']/1e9:7.2f} GB  saving={acc['saving']:.0%}")
 
     print("\n### correctness at size (interpret mode)")
+    # the FedCM blend now launches through the generalized fed_direction
+    # kernel (the dedicated fedcm_update kernel is retired to ref-only);
+    # coefficients (η, α, 0, 1−α) select the blend form
     rng = np.random.default_rng(0)
     n = 4_000_000
     x = jnp.asarray(rng.normal(size=n), jnp.float32)
     g = jnp.asarray(rng.normal(size=n), jnp.float32)
     d = jnp.asarray(rng.normal(size=n), jnp.float32)
+    coefs = jnp.asarray([0.05, 0.1, 0.0, 0.9], jnp.float32)
     t0 = time.time()
-    out = jax.block_until_ready(fedcm_step(x, g, d, 0.1, 0.05))
+    out = jax.block_until_ready(fed_direction_flat(x, g, (d,), coefs))
     t_k = time.time() - t0
     ref = fedcm_step_ref(x, g, d, 0.1, 0.05)
     err = float(jnp.max(jnp.abs(out - ref)))

@@ -219,13 +219,24 @@ class FedConfig:
     # concat of model-sharded leaves would force all-gathers).
     use_flat_plane: bool = True
     # route the per-local-step update x ← x − η_l·v through the fused
-    # Pallas kernels instead of unfused jnp arithmetic.  On the flat plane
-    # this is kernels/fed_direction (all algorithms) plus the fused
-    # kernels/server_update round-close (fedavg/fedcm/scaffold/mimelite);
-    # on the tree path it is the legacy kernels/fedcm_update whole-tree
-    # launch (fedcm/mimelite only).  ref.py files are the oracles
+    # Pallas kernels instead of unfused jnp arithmetic — flat plane only:
+    # kernels/fed_direction (all algorithms) plus the fused
+    # kernels/server_update round-close (fedavg/fedcm/scaffold/mimelite).
+    # The legacy whole-tree kernels/fedcm_update launch is retired; on the
+    # tree path this flag is inert.  ref.py files are the oracles
     # (tests/test_run_rounds.py, tests/test_kernels.py).
     use_fused_kernel: bool = False
+    # async pipelined engine (engine.run_rounds_async): number of cohorts
+    # in flight.  1 = the sync schedule (each cohort folds the round it
+    # launches); D > 1 overlaps D cohorts — a fold is D−1 rounds stale.
+    pipeline_depth: int = 1
+    # rounds of momentum staleness the clients descend against (the
+    # broadcast Δ_t / c is read from an S-deep delay line).  0 = current.
+    staleness: int = 0
+    # FedACG-style per-round-of-staleness discount γ: a fold that is
+    # (pipeline_depth−1) rounds stale is weighted γ^(depth−1) — rides the
+    # fused server kernel's SMEM coefficient row.  1.0 = no discount.
+    staleness_discount: float = 1.0
 
 
 @dataclass(frozen=True)

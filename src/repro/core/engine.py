@@ -62,18 +62,31 @@ of the PR-1 kernel route disappears entirely.  The tree path
 (``use_flat_plane=False``) is retained verbatim as the numerical oracle
 (tests/test_flat.py) and for tensor-sharded lowering (launch/fed_dryrun).
 
-``cfg.use_fused_kernel`` routes the update phase through Pallas: on the
-flat plane, the per-local-step direction via ``kernels/fed_direction`` (all
+``cfg.use_fused_kernel`` routes the update phase through Pallas — flat
+plane only: the per-local-step direction via ``kernels/fed_direction`` (all
 algorithms) and the round-close masked-mean + momentum EMA + param step via
-``kernels/server_update`` (fedavg/fedcm/scaffold/mimelite); on the tree
-path, the legacy whole-tree ``fedcm_step_tree`` launch (fedcm/mimelite).
+``kernels/server_update`` (fedavg/fedcm/scaffold/mimelite).  The legacy
+whole-tree ``fedcm_update`` launch is retired from the tree path (its
+``ref.py`` stays as a blend oracle); on the tree path the flag is inert.
 Each kernel's ``ref.py`` is its oracle.
+
+Async pipelined engine (``run_rounds_async``): overlapping cohorts as ONE
+``lax.scan`` whose carry adds a static depth-D ring of in-flight cohort
+uplinks (``repro.core.flat.CohortUplink``) and an S-deep momentum delay
+line.  Iteration t launches a cohort against (current params,
+S-rounds-stale momentum), rotates it into the ring, and folds the uplink
+launched D−1 iterations ago through the staleness-discount-extended fused
+server kernel.  ``(D=1, S=0)`` reproduces ``run_rounds`` exactly; eval can
+ride inside the scan at an ``eval_every`` cadence (padded ``lax.map``) so
+train-with-eval is one jitted program.  The ring is also the seam where a
+multi-host cohort-axis reduce-scatter slots in (ROADMAP).
 """
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -90,25 +103,56 @@ from repro.core.algorithms import (
     server_init,
     sparse_client_finalize,
 )
-from repro.core.flat import FlatSpec
+from repro.core.flat import CohortUplink, FlatSpec, ring_push
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
 from repro.kernels.fed_direction.ops import flat_direction_step
-from repro.kernels.fedcm_update.ops import fedcm_step_tree
 from repro.kernels.server_update.ops import fused_server_step
 from repro.utils.trees import (
     ravel_leaves,
     tree_axpy,
     tree_bytes,
-    tree_scale,
     tree_zeros_like,
 )
 
 
+class FlatMaster(NamedTuple):
+    """f32 master planes carried ACROSS flat-engine calls for sub-f32 trees.
+
+    The flat engine computes on f32 ``(P,)`` planes and rounds back to the
+    leaf dtypes on exit; without this cache a bf16 model would re-round at
+    every ``run_round`` boundary while ``run_rounds`` rounds once at the
+    end (the divergence PR 2 documented).  ``FederatedEngine.init`` attaches
+    it whenever the tree has non-f32 leaves, ``_ravel_state`` resumes from
+    it, and ``_unravel_state`` refreshes it — so N× ``run_round`` agrees
+    with ``run_rounds(N)`` to the same cross-program f32 noise as an f32
+    model (measured ≲2e-5; the legacy behaviour differed by a bf16 ulp,
+    ~4e-3, at EVERY boundary — the regression test pins the gap).  ``None``
+    for all-f32 trees (the ravel is exact, nothing to preserve) and on the
+    tree path."""
+
+    params: jax.Array  # (P,) f32
+    second_moment: jax.Array  # (P,) f32
+    client_states: Optional[jax.Array]  # (N, P) f32 (kernel path) or None
+
+
 class FedState(NamedTuple):
+    """Engine state.  ``master`` is an INTERNAL cache: for sub-f32 trees it
+    holds the un-rounded f32 planes that ``params``/``server.second_moment``
+    /``client_states`` are rounded views OF, and the engine resumes from it
+    in preference to re-ravelling the leaves.  If you replace any of those
+    fields externally (checkpoint restore, weight surgery), drop the cache
+    — ``state._replace(params=new, master=None)`` — or the next round will
+    silently continue from the cached planes instead of your edit."""
+
     params: Any
     server: ServerState
     client_states: Any  # stacked (N, …) or None
     rng: jax.Array
+    master: Optional[FlatMaster] = None  # flat-engine f32 master planes
+
+
+# algorithms whose round-close the fused server kernel covers
+_FUSED_SERVER_ALGOS = ("fedavg", "fedcm", "scaffold", "mimelite")
 
 
 class RoundMetrics(NamedTuple):
@@ -119,6 +163,24 @@ class RoundMetrics(NamedTuple):
     eta_l: jax.Array
     bytes_down: jax.Array  # server→clients this round (f32 elements × 4)
     bytes_up: jax.Array  # clients→server this round
+
+
+class AsyncRoundMetrics(NamedTuple):
+    """Per-iteration metrics of the pipelined scan.  ``loss``/``n_active``/
+    ``eta_l``/``momentum_norm`` describe the cohort LAUNCHED this round
+    (client compute happens at launch); ``delta_norm``/``folded`` describe
+    the fold — 0 during the D−1 warmup rounds while the pipeline fills.
+    ``eval_acc`` is −1.0 on rounds where the in-scan eval didn't run."""
+
+    loss: jax.Array
+    n_active: jax.Array
+    delta_norm: jax.Array
+    momentum_norm: jax.Array  # ‖broadcast momentum‖ as the CLIENTS saw it
+    eta_l: jax.Array
+    bytes_down: jax.Array
+    bytes_up: jax.Array
+    folded: jax.Array  # 0/1: did this round fold a completed cohort
+    eval_acc: jax.Array  # in-scan eval accuracy, −1.0 when not evaluated
 
 
 def cohort_capacity(cfg: FedConfig) -> int:
@@ -170,17 +232,11 @@ def client_update(
     """One client's K local steps.  Returns (outputs, mean local loss)."""
     x0 = params
     cst = (client_state, bcast_momentum) if algo.name == "scaffold" else client_state
-    # fedcm and mimelite share the blend form v = α·g + (1−α)·m, which is
-    # exactly what the fused Pallas kernel computes in one HBM pass
-    use_kernel = cfg.use_fused_kernel and algo.name in ("fedcm", "mimelite")
 
     def step(x, batch):
         loss, g = jax.value_and_grad(loss_fn)(x, batch)
         if cfg.weight_decay:
             g = tree_axpy(cfg.weight_decay, x, g)
-        if use_kernel:
-            x = fedcm_step_tree(x, g, bcast_momentum, cfg.alpha, eta_l)
-            return x, loss
         v = algo.direction(cfg, bcast_momentum, cst, x, x0, g)
         # keep the carry dtype stable (bf16 params + f32 momentum promote)
         x = jax.tree_util.tree_map(
@@ -326,15 +382,57 @@ class FederatedEngine:
             static_argnames=("n_rounds",),
             donate_argnums=(0,),
         )
+        self.run_rounds_async_traces = 0
+        self._run_rounds_async = jax.jit(
+            self._run_rounds_async_impl,
+            static_argnames=(
+                "n_rounds", "pipeline_depth", "staleness", "eval_every",
+                "predict_fn", "scan_unroll",
+            ),
+            donate_argnums=(0,),
+        )
+        # donate the state only: the pending uplinks are consumed, not
+        # updated — most of their buffers have no same-shaped output to
+        # alias into and donating them just trips "unusable donation"
+        # warnings
+        self._drain_async = jax.jit(
+            self._drain_async_impl,
+            static_argnames=("pipeline_depth",),
+            donate_argnums=(0,),
+        )
 
     # -------------------------------------------------- init
     def init(self, params, rng) -> FedState:
-        return FedState(
+        state = FedState(
             params=params,
             server=server_init(params, self.cfg.momentum_dtype),
             client_states=client_state_init(params, self.cfg),
             rng=rng,
         )
+        # flat engine + sub-f32 leaves: attach the f32 master planes up
+        # front so every later call sees one stable treedef (no master→
+        # no-master retrace) and run_round/run_rounds share one precision
+        # contract from round 0
+        if self.cfg.use_flat_plane:
+            try:
+                spec = FlatSpec.from_tree(params)
+            except TypeError:  # non-float leaves: flat path will refuse anyway
+                return state
+            if self._needs_master(spec):
+                cst = None
+                if state.client_states is not None and self.cfg.use_fused_kernel:
+                    cst = spec.ravel(state.client_states, batch_dims=1)
+                state = state._replace(master=FlatMaster(
+                    params=spec.ravel(params),
+                    second_moment=spec.ravel(state.server.second_moment),
+                    client_states=cst,
+                ))
+        return state
+
+    @staticmethod
+    def _needs_master(spec: FlatSpec) -> bool:
+        """True when rounding plane→leaves loses bits (any non-f32 leaf)."""
+        return any(np.dtype(l.dtype) != np.float32 for l in spec.leaves)
 
     # -------------------------------------------------- payload accounting
     def payload_bytes(self, params) -> Dict[str, int]:
@@ -378,20 +476,32 @@ class FederatedEngine:
         produce flat buffers anyway, so gather/scatter are ONE op each);
         the jnp path keeps them in leaf form — its local steps consume
         leaves, and a per-round (C, P) concatenate costs more than the
-        per-leaf gather/scatter it would replace."""
-        cfg = self.cfg
+        per-leaf gather/scatter it would replace.
+
+        A carried ``state.master`` (sub-f32 trees) takes precedence over
+        re-ravelling the rounded leaves: that is what makes sequential
+        ``run_round`` calls bitwise-continue the f32 trajectory instead of
+        re-rounding at every boundary."""
+        cfg, mst = self.cfg, state.master
         fsrv = ServerState(
+            # momentum plane and tree share momentum_dtype — ravel is exact,
+            # no master needed
             momentum=spec.ravel(state.server.momentum, dtype=cfg.momentum_dtype),
-            second_moment=spec.ravel(state.server.second_moment),
+            second_moment=(mst.second_moment if mst is not None
+                           else spec.ravel(state.server.second_moment)),
             round=state.server.round,
         )
         fcst = state.client_states
         if fcst is not None and cfg.use_fused_kernel:
-            fcst = spec.ravel(fcst, batch_dims=1)
-        return FedState(spec.ravel(state.params), fsrv, fcst, state.rng)
+            fcst = (mst.client_states if mst is not None and
+                    mst.client_states is not None
+                    else spec.ravel(fcst, batch_dims=1))
+        params = mst.params if mst is not None else spec.ravel(state.params)
+        return FedState(params, fsrv, fcst, state.rng)
 
     def _unravel_state(self, fstate: FedState, spec: FlatSpec) -> FedState:
-        """Flat-plane state → tree state (leaf shapes AND dtypes restored)."""
+        """Flat-plane state → tree state (leaf shapes AND dtypes restored).
+        For sub-f32 trees the un-rounded planes ride along as ``master``."""
         cfg = self.cfg
         srv = ServerState(
             momentum=spec.unravel(fstate.server.momentum, dtype=cfg.momentum_dtype),
@@ -399,22 +509,33 @@ class FederatedEngine:
             round=fstate.server.round,
         )
         cst = fstate.client_states
-        if cst is not None and cfg.use_fused_kernel:
+        cst_is_plane = cst is not None and cfg.use_fused_kernel
+        if cst_is_plane:
             cst = spec.unravel(cst)
-        return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng)
+        master = None
+        if self._needs_master(spec):
+            master = FlatMaster(
+                params=fstate.params,
+                second_moment=fstate.server.second_moment,
+                client_states=fstate.client_states if cst_is_plane else None,
+            )
+        return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng, master)
 
-    def _flat_round_step(self, fstate: FedState, batches, ids, mask,
-                         full_batches, spec: FlatSpec):
-        """One round entirely on the flat plane: (P,) carry through the
-        local-step scan, (C, P) cohort planes through aggregation, (N, P)
-        client-state scatter.  Same math as ``_tree_round_step`` — the
-        equivalence tests in tests/test_flat.py hold the two bitwise-close."""
+    def _flat_cohort_pass(self, fstate: FedState, batches, ids, mask,
+                          full_batches, spec: FlatSpec, m_t, eta_l):
+        """The cohort's client phase on the flat plane: gather per-client
+        state, vmap the K-local-step update over the cohort.  Shared
+        VERBATIM by the sync round (``_flat_round_step``) and the async
+        launch (``_launch_async_cohort``) — ``m_t`` is the broadcast buffer
+        the clients descend against (the CURRENT momentum for sync, an
+        S-rounds-stale one for the pipelined path).
+
+        Returns (outs, losses, cohort_cst) where cohort_cst is the (C, P)
+        gathered client-state plane on the kernel path (None otherwise)."""
         cfg, algo = self.cfg, self.algo
-        eta_l = local_learning_rate(cfg, fstate.server.round)
         batches = self._constrain_cohort(batches)
 
         x_t = fstate.params  # (P,) f32
-        m_t = fstate.server.momentum  # (P,) momentum_dtype
         # leaf views for the local scan — unravelled ONCE per round (x0 is
         # the scan carry init, so its slices materialize at loop entry; the
         # momentum view is a loop-invariant closure)
@@ -441,18 +562,20 @@ class FederatedEngine:
             )
 
         outs, losses = jax.vmap(one_client)(cohort_cst_tree, cohort_cst, batches, full)
+        return outs, losses, cohort_cst
 
-        # masked cohort means, reduced straight to flat (P,) buffers.
-        # jnp path: outs hold (C, *shape) leaf trees — contract per leaf and
-        # concatenate only the tiny means (materializing the full (C, P)
-        # plane costs more than it saves).  Kernel path: outs ARE (C, P)
-        # planes (the fused server kernel streams them once).  Unused
-        # planes are None — never materialized, never reduced (the tree
-        # path pays for both).
-        w = mask.astype(jnp.float32)
-        n_active = jnp.sum(w)
+    def _masked_pmean(self, x, w, n_active):
+        """Masked cohort mean of one uplink, reduced straight to a flat
+        ``(P,)`` buffer (quantized to ``cfg.aggregate_dtype`` first, like
+        every aggregation path).  jnp path: ``x`` is a (C, *shape) leaf
+        tree — contract per leaf and concatenate only the tiny means
+        (materializing the full (C, P) plane costs more than it saves).
+        Kernel path: ``x`` IS a (C, P) plane — one contraction.  ``None``
+        passes through (planes that were never materialized)."""
+        if x is None:
+            return None
+        cfg = self.cfg
         agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
-        use_kernel = cfg.use_fused_kernel
 
         def leaf_mean(a):
             return (
@@ -460,26 +583,45 @@ class FederatedEngine:
                 .astype(jnp.float32) / n_active
             )
 
-        def pmean(x):
-            if x is None:
-                return None
-            if use_kernel:  # (C, P) plane
-                return leaf_mean(x)
-            return ravel_leaves(
-                [leaf_mean(l) for l in jax.tree_util.tree_leaves(x)], jnp.float32
-            )
+        if cfg.use_fused_kernel:  # (C, P) plane
+            return leaf_mean(x)
+        return ravel_leaves(
+            [leaf_mean(l) for l in jax.tree_util.tree_leaves(x)], jnp.float32
+        )
+
+    def _flat_round_step(self, fstate: FedState, batches, ids, mask,
+                         full_batches, spec: FlatSpec):
+        """One round entirely on the flat plane: (P,) carry through the
+        local-step scan, (C, P) cohort planes through aggregation, (N, P)
+        client-state scatter.  Same math as ``_tree_round_step`` — the
+        equivalence tests in tests/test_flat.py hold the two bitwise-close."""
+        cfg, algo = self.cfg, self.algo
+        eta_l = local_learning_rate(cfg, fstate.server.round)
+        x_t = fstate.params  # (P,) f32
+        m_t = fstate.server.momentum  # (P,) momentum_dtype
+        outs, losses, cohort_cst = self._flat_cohort_pass(
+            fstate, batches, ids, mask, full_batches, spec, m_t, eta_l
+        )
+
+        # masked cohort means, reduced straight to flat (P,) buffers
+        # (_masked_pmean; unused planes are None — never materialized,
+        # never reduced, where the tree path pays for both)
+        w = mask.astype(jnp.float32)
+        n_active = jnp.sum(w)
+        use_kernel = cfg.use_fused_kernel
 
         fsrv = fstate.server
-        if use_kernel and algo.name in ("fedavg", "fedcm", "scaffold", "mimelite"):
+        if use_kernel and algo.name in _FUSED_SERVER_ALGOS:
             new_params, new_momentum, mean_delta = self._fused_server_update(
                 algo, outs, w, n_active, x_t, m_t, eta_l
             )
             new_server = ServerState(new_momentum, fsrv.second_moment, fsrv.round + 1)
         else:
-            mean_delta = pmean(outs.delta)
+            mean_delta = self._masked_pmean(outs.delta, w, n_active)
             new_params, new_server = algo.server_update(
-                cfg, x_t, fsrv, mean_delta, pmean(outs.state_delta),
-                pmean(outs.extra), n_active, eta_l,
+                cfg, x_t, fsrv, mean_delta,
+                self._masked_pmean(outs.state_delta, w, n_active),
+                self._masked_pmean(outs.extra, w, n_active), n_active, eta_l,
             )
 
         # scatter updated client states back (only active cohort members):
@@ -511,10 +653,15 @@ class FederatedEngine:
         )
         return FedState(new_params, new_server, new_cst, fstate.rng), metrics
 
-    def _fused_server_update(self, algo, outs, w, n_active, x_t, m_t, eta_l):
+    def _fused_server_update(self, algo, outs, w, n_active, x_t, m_t, eta_l,
+                             discount=1.0):
         """Round-close via the fused server kernel: masked mean + momentum
         EMA + param step in one pass over the (C, P) plane (two passes for
-        the algorithms that EMA a second plane)."""
+        the algorithms that EMA a second plane).
+
+        ``discount`` is the staleness weight γ the async engine applies to
+        folded in-flight cohorts — it rides the kernel's SMEM coefficient
+        row (1.0 for the sync path: a f32 multiply by 1.0 is exact)."""
         cfg = self.cfg
         wn = w / n_active
         # honor cfg.aggregate_dtype exactly like the jnp paths: the uplink
@@ -531,25 +678,28 @@ class FederatedEngine:
             s = -1.0 / (eta_l * cfg.local_steps)
             m_dt = jnp.dtype(cfg.momentum_dtype) if algo.name == "fedcm" else jnp.float32
             return fused_server_step(
-                q(outs.delta), wn, x_t, m_t, 0.0, s, cfg.eta_g, m_dtype=m_dt
+                q(outs.delta), wn, x_t, m_t, 0.0, s, cfg.eta_g,
+                m_dtype=m_dt, discount=discount,
             )
         if algo.name == "scaffold":
             new_x, _, mean_delta = fused_server_step(
-                q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g
+                q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g,
+                discount=discount,
             )
             frac = n_active / cfg.num_clients
             _, new_c, _ = fused_server_step(
                 q(outs.state_delta), wn, x_t, m_t, 1.0, frac, 0.0,
-                m_dtype=jnp.float32,
+                m_dtype=jnp.float32, discount=discount,
             )
             return new_x, new_c, mean_delta
         # mimelite: x from the delta plane, m EMA from the full-batch grads
         new_x, _, mean_delta = fused_server_step(
-            q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g
+            q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g,
+            discount=discount,
         )
         _, new_m, _ = fused_server_step(
             q(outs.extra), wn, x_t, m_t, 1.0 - cfg.alpha, cfg.alpha, 0.0,
-            m_dtype=jnp.float32,
+            m_dtype=jnp.float32, discount=discount,
         )
         return new_x, new_m, mean_delta
 
@@ -684,12 +834,13 @@ class FederatedEngine:
         axis.  Numerically equivalent to calling ``run_round`` ``n_rounds``
         times (same rng threading, same ``_round_step_impl``); the
         equivalence test in tests/test_run_rounds.py holds all algorithms
-        to that.  Caveat for sub-f32 param leaves on the flat plane: this
-        fused form carries one f32 master plane across all N rounds and
-        rounds to the leaf dtype once at the end, while ``run_round``
-        re-rounds at every round boundary — bf16 trajectories agree to
-        bf16 precision per round, not bitwise (f32 params are exact either
-        way).
+        to that.  Sub-f32 param leaves on the flat plane now agree at the
+        SAME tolerance: both paths carry the same f32 master planes
+        (``FedState.master``) across round boundaries and only the
+        returned leaf views are rounded — ``run_round`` no longer
+        re-rounds the carried state each boundary (the PR-2 divergence
+        this closes; the bf16 regression test in tests/test_run_rounds.py
+        pins the contract).
 
         The input ``state`` may be donated to the computation — use the
         returned state, not the argument, afterwards.
@@ -720,6 +871,365 @@ class FederatedEngine:
 
         return jax.lax.scan(body, state, None, length=n_rounds)
 
+    # -------------------------------------------------- async pipelined rounds
+    def run_rounds_async(
+        self,
+        state: FedState,
+        data,
+        n_rounds: int,
+        *,
+        pipeline_depth: Optional[int] = None,
+        staleness: Optional[int] = None,
+        eval_every: int = 0,
+        eval_data: Optional[Tuple[Any, Any]] = None,
+        predict_fn: Optional[Callable[[Any, Any], jax.Array]] = None,
+        eval_batch_size: int = 1000,
+        drain: bool = True,
+        scan_unroll: int = 1,
+    ) -> Tuple[FedState, AsyncRoundMetrics]:
+        """Overlapping-cohort (stale-momentum) FedCM: ONE pipelined lax.scan.
+
+        Every scan iteration LAUNCHES one cohort against the current params
+        and a broadcast momentum that is ``staleness`` rounds stale, pushes
+        its uplink — cohort delta plane plus per-algorithm extras
+        (``repro.core.flat.CohortUplink``) — into a depth-``pipeline_depth``
+        ring carried by the scan, and FOLDS the oldest in-flight cohort
+        into the server state.  A folded cohort is therefore
+        ``pipeline_depth − 1`` rounds old: its clients descended from
+        params the server has since moved past — exactly the
+        delayed/partial aggregation client-level momentum is robust to
+        (Cheng et al. 2023), with the fold weighted by the FedACG-style
+        discount ``cfg.staleness_discount ** (depth−1)`` carried into the
+        fused server kernel's SMEM coefficient row.
+
+        ``pipeline_depth=1, staleness=0`` IS the sync schedule: the slot
+        pushed at iteration t is popped at iteration t, the discount is
+        γ⁰ = 1, and the trajectory matches ``run_rounds`` exactly (the
+        equivalence test in tests/test_run_rounds.py holds all six
+        algorithms to it).
+
+        The first ``pipeline_depth − 1`` iterations fold nothing (pipeline
+        fill — unrolled launch-only steps that grow the ring to its static
+        depth; ``metrics.folded`` is 0 there), and with ``drain=True``
+        (default) the cohorts still in flight at the end are folded by a
+        fixed-size epilogue dispatch so no client work is discarded —
+        ``n_rounds`` launches, ``n_rounds`` folds, still zero host
+        round-trips (the epilogue's operands never leave the device;
+        keeping it in the main program makes XLA clone the whole scan
+        body around the final carry, measurably slower than a second
+        dispatch).
+
+        ``eval_every > 0`` moves evaluation device-resident INSIDE the scan
+        (requires ``predict_fn`` and ``eval_data=(x_test, y_test)``): every
+        eval_every-th iteration runs the padded ``lax.map`` eval on the
+        post-fold params, so a full train-with-eval run is ONE jitted
+        program with zero host round-trips; off-cadence rounds report
+        ``eval_acc = −1.0``.
+
+        ``scan_unroll`` unrolls the steady scan body (static): the ring
+        rotation materializes at the loop boundary once per UNROLLED
+        GROUP instead of once per round — within a group the fold reads
+        the previous launch's uplink as straight dataflow.  ``2`` wins
+        ~8% per round on the CPU update-bound benchmark at D≥2; compile
+        time scales with the factor (the sync scan has no ring boundary
+        and keeps unroll=1).
+
+        Requires ``cfg.use_flat_plane`` (the ring is a flat-plane carry).
+        The input ``state`` may be donated — use the returned state.
+        """
+        cfg = self.cfg
+        depth = cfg.pipeline_depth if pipeline_depth is None else pipeline_depth
+        stale = cfg.staleness if staleness is None else staleness
+        if n_rounds < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+        if depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got {depth}")
+        if stale < 0:
+            raise ValueError(f"staleness must be >= 0, got {stale}")
+        if not cfg.use_flat_plane:
+            raise ValueError(
+                "run_rounds_async requires cfg.use_flat_plane=True — the "
+                "in-flight cohort ring is a flat-plane carry (the tree path "
+                "stays the sync oracle)"
+            )
+        xb = yb = wb = None
+        if eval_every:
+            if predict_fn is None or eval_data is None:
+                raise ValueError(
+                    "eval_every > 0 needs predict_fn and eval_data=(x, y)"
+                )
+            xb, yb, wb = _pad_eval_batches(eval_data[0], eval_data[1], eval_batch_size)
+        state, pending, metrics = self._run_rounds_async(
+            state, data.client_x, data.client_y, xb, yb, wb,
+            n_rounds=n_rounds, pipeline_depth=depth, staleness=stale,
+            eval_every=eval_every,
+            predict_fn=predict_fn if eval_every else None,
+            scan_unroll=scan_unroll,
+        )
+        if drain and len(pending):
+            state = self._drain_async(state, pending, pipeline_depth=depth)
+        return state, metrics
+
+    def _run_rounds_async_impl(
+        self, state: FedState, client_x, client_y, xb, yb, wb, *,
+        n_rounds: int, pipeline_depth: int, staleness: int, eval_every: int,
+        predict_fn, scan_unroll: int = 1,
+    ):
+        self.run_rounds_async_traces += 1  # python side effect: trace count
+        cfg, algo = self.cfg, self.algo
+        D, S = pipeline_depth, staleness
+
+        spec = FlatSpec.from_tree(state.params)
+        fstate = self._ravel_state(state, spec)
+        # momentum delay line: slot t mod S holds the broadcast buffer as it
+        # was ENTERING round t−S (read-before-write); seeded with the
+        # initial momentum so the first S rounds see round-0 state.  Only
+        # algorithms that broadcast momentum (fedcm/mimelite Δ_t, scaffold
+        # c) feel S at all.
+        mhist = None
+        if S > 0 and algo.needs_momentum_broadcast:
+            mhist = jnp.tile(fstate.server.momentum[None], (S, 1))
+        # FedACG-style lookahead weight of a fold that is D−1 rounds stale —
+        # STATIC (depth is static), so γ = 1 costs nothing on the sync path
+        discount = float(cfg.staleness_discount) ** (D - 1)
+        pay = self._payload_from_nbytes(spec.nbytes)
+
+        def in_scan_eval(t, x_plane):
+            if not eval_every or predict_fn is None:
+                return jnp.float32(-1.0)
+
+            def do_eval(xp):
+                params = spec.unravel(xp)
+
+                def one(args):
+                    bx, by, bw = args
+                    logits = predict_fn(params, bx)
+                    hits = (jnp.argmax(logits, -1) == by).astype(jnp.float32)
+                    return jnp.sum(hits * bw)
+
+                return jnp.sum(jax.lax.map(one, (xb, yb, wb))) / jnp.sum(wb)
+
+            if isinstance(t, int):  # unrolled warmup step: cadence is static
+                return do_eval(x_plane) if (t + 1) % eval_every == 0 \
+                    else jnp.float32(-1.0)
+            return jax.lax.cond(
+                jnp.mod(t + 1, eval_every) == 0, do_eval,
+                lambda xp: jnp.float32(-1.0), x_plane,
+            )
+
+        def step(fst, pending, mhist, t, fold: bool):
+            """One pipelined iteration.  ``fold`` is STATIC: the D−1
+            warmup steps (pipeline fill — nothing old enough to fold) only
+            grow the ring; every steady step rotates it — the popped
+            uplink is by construction D−1 rounds old."""
+            r0 = fst.server.round
+            fst, batches, ids, mask, full = self._prepare_round(fst, client_x, client_y)
+            if mhist is None:
+                m_used = fst.server.momentum
+            else:
+                sm = jnp.mod(t, S)
+                m_used = jax.lax.dynamic_index_in_dim(mhist, sm, 0, keepdims=False)
+                mhist = jax.lax.dynamic_update_index_in_dim(
+                    mhist, fst.server.momentum, sm, 0
+                )
+            entry, n_active, loss = self._launch_async_cohort(
+                fst, m_used, batches, ids, mask, full, spec
+            )
+            if fold:
+                oldest, pending = ring_push(pending, entry)
+                fst, mean_norm = self._fold_async_slot(fst, oldest, spec, discount)
+            else:
+                pending = (*pending, entry)
+                mean_norm = jnp.float32(0.0)
+            # round counter is LAUNCH-aligned (η_l schedule stays in step
+            # with the sync engine regardless of pipeline fill)
+            fst = fst._replace(server=fst.server._replace(round=r0 + 1))
+            metrics = AsyncRoundMetrics(
+                loss=loss,
+                n_active=n_active,
+                delta_norm=mean_norm,
+                momentum_norm=_flat_norm(m_used),
+                eta_l=entry.eta_l,
+                bytes_down=n_active * jnp.float32(pay["down_per_client"]),
+                bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+                folded=jnp.float32(1.0 if fold else 0.0),
+                eval_acc=in_scan_eval(t, fst.params),
+            )
+            return fst, pending, mhist, metrics
+
+        # pipeline fill: D−1 launch-only steps, UNROLLED — they grow the
+        # ring tuple, whose structure must be static before the scan
+        pending: Tuple[CohortUplink, ...] = ()
+        fill_metrics = []
+        warmup = min(D - 1, n_rounds)
+        for t in range(warmup):
+            fstate, pending, mhist, m = step(fstate, pending, mhist, t, fold=False)
+            fill_metrics.append(m)
+
+        def body(carry, t):
+            fst, pending, mh = carry
+            fst, pending, mh, m = step(fst, pending, mh, t, fold=True)
+            return (fst, pending, mh), m
+
+        (fstate, pending, mhist), metrics = jax.lax.scan(
+            body, (fstate, pending, mhist), jnp.arange(warmup, n_rounds),
+            unroll=scan_unroll,
+        )
+        if fill_metrics:
+            fill = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *fill_metrics
+            )
+            metrics = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), fill, metrics
+            )
+        return self._unravel_state(fstate, spec), pending, metrics
+
+    def _drain_async_impl(self, state: FedState,
+                          pending: Tuple[CohortUplink, ...], *,
+                          pipeline_depth: int):
+        """Pipeline flush: fold the ≤ D−1 cohorts still in flight at the
+        end of a ``run_rounds_async`` scan, oldest first.  A separate
+        dispatch ON PURPOSE: feeding the scan's final (state, ring)
+        carries into fold arithmetic inside the same program makes XLA
+        clone the entire scan body around the last iteration — one
+        fixed-size epilogue program is cheaper than that, and its operands
+        never leave the device."""
+        spec = FlatSpec.from_tree(state.params)
+        fstate = self._ravel_state(state, spec)
+        # the same staleness weight the in-scan folds used (depth, not
+        # len(pending): a shorter-than-depth run still launched at the
+        # configured overlap)
+        discount = float(self.cfg.staleness_discount) ** (pipeline_depth - 1)
+        for entry in pending:
+            fstate, _ = self._fold_async_slot(fstate, entry, spec, discount)
+        return self._unravel_state(fstate, spec)
+
+    def _launch_async_cohort(self, fstate: FedState, m_used, batches, ids,
+                             mask, full, spec: FlatSpec):
+        """Client phase of one pipelined iteration: run the cohort against
+        (current params, stale momentum) and pack its uplink as a ring
+        entry.  Kernel path: outputs already ARE ``(C, P)`` planes and ride
+        raw (the fused server kernel wants the cohort axis).  jnp path:
+        ``delta``/``extra`` are pre-reduced HERE to the fold-ready ``(P,)``
+        masked means — the weights are launch-time constants, so this is
+        the fold's exact value, computed by the exact sync reduction
+        (``_masked_pmean``); only the per-client ``state_delta`` plane must
+        survive to fold time (the scatter is per-client).
+
+        Returns (entry, n_active, cohort masked-mean loss)."""
+        cfg, algo = self.cfg, self.algo
+        eta_l = local_learning_rate(cfg, fstate.server.round)
+        outs, losses, _ = self._flat_cohort_pass(
+            fstate, batches, ids, mask, full, spec, m_used, eta_l
+        )
+        w = mask.astype(jnp.float32)
+        n_active = jnp.sum(w)
+
+        if cfg.use_fused_kernel:
+            delta_e, extra_e = outs.delta, outs.extra
+        else:
+            delta_e = self._masked_pmean(outs.delta, w, n_active)
+            extra_e = self._masked_pmean(outs.extra, w, n_active)
+        state_e = None
+        if outs.state_delta is not None:
+            state_e = (outs.state_delta if cfg.use_fused_kernel
+                       else spec.ravel(outs.state_delta, batch_dims=1))
+
+        entry = CohortUplink(
+            delta=delta_e,
+            state_delta=state_e,
+            extra=extra_e,
+            ids=ids.astype(jnp.int32),
+            w=w,
+            eta_l=eta_l,
+        )
+        return entry, n_active, jnp.sum(losses * w) / n_active
+
+    def _fold_async_slot(self, fstate: FedState, entry: CohortUplink,
+                         spec: FlatSpec, discount):
+        """Server phase of one pipelined iteration: fold ONE ring entry —
+        masked cohort mean, staleness-discounted momentum EMA + param step,
+        client-state scatter — into the current flat state.  Every entry
+        is a real launch (the unrolled pipeline fill means the ring never
+        holds placeholders), so there is no validity masking to pay.  Uses
+        the entry's LAUNCH-time η_l (the deltas were computed with it).
+        Leaves the round counter alone — it is launch-aligned (see the
+        scan body).
+
+        Returns (new_fstate, ‖mean Δ‖ of the folded cohort)."""
+        cfg, algo = self.cfg, self.algo
+        w = entry.w
+        n_active = jnp.sum(w)
+        x_t = fstate.params
+        m_t = fstate.server.momentum
+        fsrv = fstate.server
+        use_kernel = cfg.use_fused_kernel and algo.name in _FUSED_SERVER_ALGOS
+
+        if use_kernel:
+            new_params, new_momentum, mean_delta = self._fused_server_update(
+                algo, entry, w, n_active, x_t, m_t, entry.eta_l,
+                discount=discount,
+            )
+            new_server = ServerState(new_momentum, fsrv.second_moment, fsrv.round)
+        else:
+            if cfg.use_fused_kernel:
+                # kernel-path algorithm without a fused round-close
+                # (feddyn/fedadam): reduce the raw (C, P) planes exactly as
+                # the sync kernel path does
+                mean_delta = self._masked_pmean(entry.delta, w, n_active)
+                mean_sd = self._masked_pmean(entry.state_delta, w, n_active)
+                mean_extra = self._masked_pmean(entry.extra, w, n_active)
+            else:
+                # jnp path: delta/extra were pre-reduced at launch (the
+                # weights are launch-time constants — same value, same
+                # reduction, C× less ring state); only the per-client
+                # state plane still needs its mean, reduced per leaf VIEW
+                # so the contraction shapes match the sync round's exactly
+                # (one plane-wide tensordot schedules its accumulation
+                # differently and would break D=1 bitwise equality)
+                mean_delta = entry.delta
+                mean_extra = entry.extra
+                mean_sd = None
+                if entry.state_delta is not None:
+                    mean_sd = self._masked_pmean(
+                        spec.unravel(entry.state_delta, dtype=jnp.float32),
+                        w, n_active,
+                    )
+            if discount != 1.0:  # static: the γ=1 sync fold stays bitwise
+                mean_delta_f = discount * mean_delta
+                mean_sd_f = None if mean_sd is None else discount * mean_sd
+                mean_extra_f = None if mean_extra is None else discount * mean_extra
+            else:
+                mean_delta_f, mean_sd_f, mean_extra_f = mean_delta, mean_sd, mean_extra
+            new_params, new_server = algo.server_update(
+                cfg, x_t, fsrv, mean_delta_f, mean_sd_f, mean_extra_f,
+                n_active, entry.eta_l,
+            )
+            new_server = new_server._replace(round=fsrv.round)
+
+        # scatter the folded cohort's client-state updates (stale entries
+        # of non-participants untouched)
+        new_cst = fstate.client_states
+        if algo.needs_client_state:
+            if cfg.use_fused_kernel:  # (N, P) plane: ONE gather + scatter
+                upd = fstate.client_states[entry.ids] + entry.state_delta * w[:, None]
+                new_cst = fstate.client_states.at[entry.ids].set(upd)
+            else:
+                sd_tree = spec.unravel(entry.state_delta, dtype=jnp.float32)
+
+                def scatter(a, d):
+                    upd = a[entry.ids] + d * w.reshape(
+                        (-1,) + (1,) * (d.ndim - 1)
+                    ).astype(a.dtype)
+                    return a.at[entry.ids].set(upd)
+
+                new_cst = jax.tree_util.tree_map(
+                    scatter, fstate.client_states, sd_tree
+                )
+
+        new_state = FedState(new_params, new_server, new_cst, fstate.rng)
+        return new_state, _flat_norm(mean_delta)
+
     @staticmethod
     def _to_loss_batches(raw):
         """{"x","y"} → loss_fn batch dict (pass-through for custom dicts).
@@ -745,6 +1255,24 @@ def _flat_norm(x):
 # ----------------------------------------------------------------------
 
 
+def _pad_eval_batches(x, y, batch_size: int):
+    """Pad + reshape a test set to ``(n_batches, B, …)`` with a 0/1 weight
+    plane so padded rows never count — the shared prep of the host-side
+    ``make_eval_fn`` and the in-scan eval of ``run_rounds_async``."""
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    n = x.shape[0]
+    nb = max(1, -(-n // batch_size))
+    pad = nb * batch_size - n
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    yp = jnp.pad(y, ((0, pad),))
+    w = (jnp.arange(nb * batch_size) < n).astype(jnp.float32)
+
+    def rs(a):
+        return a.reshape((nb, batch_size) + a.shape[1:])
+
+    return rs(xp), rs(yp), rs(w)
+
+
 def make_eval_fn(predict_fn: Callable[[Any, Any], jax.Array], batch_size: int = 1000):
     """predict_fn(params, x) -> logits.  Returns eval(params, x, y) -> acc.
 
@@ -768,17 +1296,7 @@ def make_eval_fn(predict_fn: Callable[[Any, Any], jax.Array], batch_size: int = 
         return jnp.sum(hits) / jnp.sum(wb)
 
     def evaluate(params, x, y):
-        x, y = jnp.asarray(x), jnp.asarray(y)
-        n = x.shape[0]
-        nb = max(1, -(-n // batch_size))
-        pad = nb * batch_size - n
-        xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-        yp = jnp.pad(y, ((0, pad),))
-        w = (jnp.arange(nb * batch_size) < n).astype(jnp.float32)
-
-        def rs(a):
-            return a.reshape((nb, batch_size) + a.shape[1:])
-
-        return float(_evaluate(params, rs(xp), rs(yp), rs(w)))
+        xb, yb, wb = _pad_eval_batches(x, y, batch_size)
+        return float(_evaluate(params, xb, yb, wb))
 
     return evaluate

@@ -24,11 +24,20 @@ variates are ``(N, P)``; ``unravel`` restores ``(..., *shape)`` leaves.
 ``run_rounds`` call and carries the planes through the local-step scan, the
 cohort vmap, aggregation, and the server update (``cfg.use_flat_plane``;
 the tree path remains as the numerical oracle).
+
+``CohortUplink`` is the in-flight cohort store of the async pipelined
+engine (``FederatedEngine.run_rounds_async``): a static depth-D ring of
+uplink planes plus per-cohort metadata, carried through the pipelined
+``lax.scan`` as a python tuple the body rotates (``ring_push``).  An
+uplink launched at round t is folded D−1 rounds later when the server
+folds the (by then stale) cohort in — the kernel path's ``(C, P)`` slot
+layout is the same layout a cohort-axis reduce-scatter wants, which is
+what makes the ring the natural seam for multi-host cohort sharding.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Tuple, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -135,3 +144,60 @@ class FlatSpec:
 
     def __repr__(self) -> str:
         return f"FlatSpec(n_leaves={len(self.leaves)}, size={self.size})"
+
+
+# ----------------------------------------------------------------------
+# in-flight cohort ring (async pipelined engine)
+# ----------------------------------------------------------------------
+
+
+class CohortUplink(NamedTuple):
+    """ONE in-flight cohort's uplink on the flat plane — the unit the
+    async engine's depth-D ring carries (a python tuple of D−1 pending
+    uplinks in the scan carry; the D-th is the one being launched).
+
+    Plane layout is PATH-DEPENDENT, mirroring the sync engine's own rule
+    about when the ``(C, P)`` cohort plane is worth materializing:
+
+    * kernel path (``use_fused_kernel``): ``delta``/``extra`` are raw
+      ``(C, P)`` planes — the fused server kernel folds mean + EMA + param
+      step in ONE streaming pass over the cohort axis at fold time.
+    * jnp path: ``delta``/``extra`` are the FOLD-READY masked means,
+      ``(P,)`` each — the mean's weights are launch-time constants, so
+      pre-reducing at launch is mathematically identical and the ring
+      carries C× less state (the sync jnp path never materializes the
+      cohort plane either; see ``flat_client_update``).
+
+    ``state_delta`` stays a raw ``(C, P)`` plane on BOTH paths: the
+    client-state scatter at fold time is inherently per-client.
+    ``state_delta``/``extra`` are ``None`` for algorithms without client
+    state / full-batch gradients — never allocated, never copied.
+    """
+
+    delta: jax.Array  # (C, P) kernel path / (P,) jnp path (pre-reduced)
+    state_delta: Optional[jax.Array]  # (C, P) or None (SCAFFOLD/FedDyn)
+    extra: Optional[jax.Array]  # (C, P) / (P,) or None (MimeLite)
+    ids: jax.Array  # (C,) int32 sampled client ids
+    w: jax.Array  # (C,) f32 active-mask weights
+    eta_l: jax.Array  # f32 η_l at launch (the fold must reuse it)
+
+
+def ring_push(pending: Tuple[CohortUplink, ...], entry: CohortUplink):
+    """Rotate the static-depth ring: append the just-launched uplink, pop
+    the OLDEST for folding.  Returns ``(oldest, new_pending)``.
+
+    The ring is a python tuple because depth is small and STATIC: rotating
+    positions at trace time gives XLA direct carry dataflow — the fold
+    reads a while-loop carry buffer, no per-round
+    ``dynamic_update_slice``/``dynamic_slice`` materialization.  (A
+    stacked ``(D, …)`` buffer with traced slot indices measured ~10%
+    slower per round on the update-bound benchmark; a traced-depth ring —
+    and the cohort-axis reduce-scatter of the multi-host roadmap item —
+    would bring the stacked form back.)
+
+    ``pending`` holds D−1 uplinks in launch order (oldest first); with
+    D = 1 it is empty and the entry folds the round it launches — the
+    sync schedule.
+    """
+    fifo = (*pending, entry)
+    return fifo[0], fifo[1:]

@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the compute hot spots (DESIGN.md §3).
 
-* ``fedcm_update``    — fused FedCM client step  v = α·g + (1−α)·Δ; x ← x − η·v
+* ``fed_direction``   — generalized fused local step (affine family covers
+  fedcm/mimelite blend, scaffold, feddyn, plain SGD; coefficients in SMEM)
+* ``server_update``   — fused round-close: masked (C,)·(C,P) cohort mean +
+  staleness-discounted momentum EMA + param step in one pass
 * ``flash_attention`` — blocked online-softmax attention (GQA, sliding window)
 * ``ssd_scan``        — chunked Mamba2 SSD scan with VMEM-carried state
+* ``fedcm_update``    — RETIRED to oracle-only: ref.py pins the FedCM blend
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; interpret=True on CPU), ref.py (pure-jnp oracle used by tests).

@@ -1,3 +1,14 @@
-from repro.kernels.fedcm_update.ops import fedcm_step, fedcm_step_tree
+"""Legacy FedCM whole-tree client-step kernel — RETIRED to oracle-only.
 
-__all__ = ["fedcm_step", "fedcm_step_tree"]
+The per-local-step blend ``x ← x − η_l·(α·g + (1−α)·Δ)`` now launches
+through the generalized ``kernels/fed_direction`` kernel on the flat
+parameter plane (coefficients ``(η_l, α, 0, 1−α)``); the whole-tree
+``fedcm_step_tree`` wrapper — which paid a concatenate/split round-trip
+per local step — and its dedicated Pallas body are deleted.  Only the
+pure-jnp oracle ``ref.fedcm_step_ref`` remains: tests use it to pin
+``fed_direction``'s blend form to Algorithm 2 line 8–9 independently of
+``fed_direction``'s own reference.
+"""
+from repro.kernels.fedcm_update.ref import fedcm_step_ref
+
+__all__ = ["fedcm_step_ref"]

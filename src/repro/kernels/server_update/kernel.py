@@ -13,6 +13,18 @@ kernel streams the plane once per element-column, keeps the mean in VMEM,
 and writes (x', m', mean) in the same pass — the whole server phase becomes
 one roofline-memory-term trip over C+2 reads and 3 writes per plane column.
 
+A fourth SMEM scalar γ (``staleness discount``, FedACG-style lookahead
+weighting) scales the folded mean before the EMA/step consume it:
+
+    m'    = c_mm·m + c_md·(γ·mean)
+    x'    = x + c_xd·(γ·mean)
+
+The async pipelined engine (``FederatedEngine.run_rounds_async``) folds
+cohorts whose deltas are ``pipeline_depth − 1`` rounds stale and passes
+γ = staleness_discount^(depth−1); the sync path passes γ = 1.0 (exact —
+a f32 multiply by 1.0 is the identity).  The emitted ``mean`` output stays
+UNdiscounted so delta-norm metrics report the cohort's actual update.
+
 Coefficient mapping (see core/engine.py):
 * fedavg/fedcm : c_mm=0, c_md=−1/(η_l·K), c_xd=η_g      (m' := Δ_{t+1})
 * scaffold     : params pass (1, 0, η_g) over Δ, then the c-EMA pass
@@ -25,8 +37,8 @@ Tiling: planes are padded to a multiple of ``block_elems`` and viewed as
 cohort column is resident per grid step (C is a cohort, 8–64, so a block is
 C·256 KiB of VMEM at the default; shrink ``block_elems`` for huge cohorts).
 ``wn`` is lane-padded to (C, LANE) (column 0 live) instead of an unaligned
-(C, 1) operand; coefficients ride in SMEM as a (1, 3) row since two of them
-are traced per-round values.
+(C, 1) operand; coefficients ride in SMEM as a (1, 4) row
+(c_mm, c_md, c_xd, γ) since several of them are traced per-round values.
 """
 from __future__ import annotations
 
@@ -44,23 +56,27 @@ def _kernel(coef_ref, wn_ref, d_ref, x_ref, m_ref, newx_ref, newm_ref, mean_ref)
     c_mm = coef_ref[0, 0]
     c_md = coef_ref[0, 1]
     c_xd = coef_ref[0, 2]
+    gamma = coef_ref[0, 3]  # staleness discount on the folded mean
     wn = wn_ref[...][:, 0].astype(jnp.float32)  # (C,) mask/|S| weights
     d = d_ref[...].astype(jnp.float32)  # (C, rows, LANE)
     mean = jnp.sum(d * wn[:, None, None], axis=0)  # (rows, LANE)
     x = x_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
-    new_m = c_mm * m + c_md * mean
+    dmean = gamma * mean
+    new_m = c_mm * m + c_md * dmean
     mean_ref[...] = mean
     newm_ref[...] = new_m.astype(newm_ref.dtype)
-    newx_ref[...] = (x + c_xd * mean).astype(newx_ref.dtype)
+    newx_ref[...] = (x + c_xd * dmean).astype(newx_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("m_dtype", "block_elems", "interpret"))
 def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
                        block_elems: int = DEFAULT_BLOCK, interpret: bool = True):
     """deltas: (C, P); wn: (C,) premultiplied mask/|S| weights; x, m: (P,);
-    coefs: (3,) f32 (c_mm, c_md, c_xd).  Returns (new_x, new_m, mean) with
-    new_m in ``m_dtype`` (default m.dtype) and mean in f32."""
+    coefs: (4,) f32 (c_mm, c_md, c_xd, γ) where γ is the staleness
+    discount applied to the mean before the EMA/step (1.0 = sync exact).
+    Returns (new_x, new_m, mean) with new_m in ``m_dtype`` (default
+    m.dtype) and mean in f32 (UNdiscounted)."""
     C, n = deltas.shape
     m_dt = jnp.dtype(m_dtype) if m_dtype is not None else m.dtype
     rows = block_elems // LANE
@@ -78,7 +94,7 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
 
     vec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
     plane = pl.BlockSpec((C, rows, LANE), lambda i: (0, i, 0))
-    smem = pl.BlockSpec((1, 3), lambda i: (0, 0))
+    smem = pl.BlockSpec((1, 4), lambda i: (0, 0))
     wspec = pl.BlockSpec((C, LANE), lambda i: (0, 0))
     new_x, new_m, mean = pl.pallas_call(
         _kernel,
@@ -91,7 +107,7 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
             jax.ShapeDtypeStruct(xr.shape, jnp.float32),
         ],
         interpret=interpret,
-    )(coefs.astype(jnp.float32).reshape(1, 3), wn_l, dr, xr, mr)
+    )(coefs.astype(jnp.float32).reshape(1, 4), wn_l, dr, xr, mr)
     return (
         new_x.reshape(padded)[:n],
         new_m.reshape(padded)[:n],

@@ -11,16 +11,21 @@ from repro.kernels.server_update.kernel import server_update_flat
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None):
+def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
+                      discount=1.0):
     """Masked cohort mean + momentum EMA + param step, one pass over (C, P).
 
     deltas (C, P), wn (C,) = mask/|S|, x (P,), m (P,).  Coefficients may be
-    traced per-round scalars.  Returns (new_x, new_m, mean_delta).
+    traced per-round scalars.  ``discount`` is the staleness weight γ the
+    async engine applies to folded in-flight cohorts (rides SMEM with the
+    other coefficients; 1.0 = sync, exact).  Returns
+    (new_x, new_m, mean_delta) with mean_delta UNdiscounted.
     """
     coefs = jnp.stack([
         jnp.asarray(c_mm, jnp.float32),
         jnp.asarray(c_md, jnp.float32),
         jnp.asarray(c_xd, jnp.float32),
+        jnp.asarray(discount, jnp.float32),
     ])
     return server_update_flat(
         deltas, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET

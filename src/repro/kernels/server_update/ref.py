@@ -1,8 +1,12 @@
 """Pure-jnp oracle for the fused server update.
 
     mean = Σ_c wn_c · Δ_c
-    m'   = c_mm·m + c_md·mean
-    x'   = x + c_xd·mean
+    m'   = c_mm·m + c_md·(γ·mean)
+    x'   = x + c_xd·(γ·mean)
+
+γ (coefs[3]) is the staleness discount the async pipelined engine applies
+to folds of in-flight cohorts; the sync path passes γ = 1.0.  The emitted
+``mean`` stays undiscounted (it feeds the delta-norm metric).
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ def server_update_ref(deltas, wn, x, m, coefs, m_dtype=None):
     mean = jnp.sum(
         deltas.astype(jnp.float32) * wn.astype(jnp.float32)[:, None], axis=0
     )
-    new_m = coefs[0] * m.astype(jnp.float32) + coefs[1] * mean
-    new_x = (x.astype(jnp.float32) + coefs[2] * mean).astype(x.dtype)
+    dmean = coefs[3] * mean
+    new_m = coefs[0] * m.astype(jnp.float32) + coefs[1] * dmean
+    new_x = (x.astype(jnp.float32) + coefs[2] * dmean).astype(x.dtype)
     return new_x, new_m.astype(m_dtype or m.dtype), mean

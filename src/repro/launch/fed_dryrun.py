@@ -46,6 +46,27 @@ BATCH = 8
 SEQ = 1024
 
 
+def _tensor_sharded_reason(spec_tree) -> "str | None":
+    """Why the flat plane cannot serve this lowering, or None if it can.
+
+    The flat engine's single (P,) concatenate is only free when every leaf
+    is replicated along non-cohort axes; a leaf partitioned over the
+    tensor-parallel "model" axis would have to be all-gathered into the
+    plane every round.
+    """
+    leaves = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    for spec in leaves:
+        for part in spec:
+            names = part if isinstance(part, (tuple, list)) else (part,)
+            if "model" in names:
+                return ("params are tensor-sharded over the 'model' axis — "
+                        "a flat (P,) concatenate would all-gather them; "
+                        "using the per-leaf tree path")
+    return None
+
+
 def build_and_lower(
     mesh,
     *,
@@ -65,20 +86,27 @@ def build_and_lower(
         loss, _ = model.loss_fn(params, batch, scan_unroll=64)
         return loss
 
+    p_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    # flat plane vs tree path is decided by the LOWERING, not hard-coded:
+    # the flat engine concatenates every leaf into one (P,) buffer, which
+    # for tensor-sharded ("model"-axis) leaves would force all-gathers of
+    # the sharded dimensions — so only then fall back to the per-leaf tree
+    # path, and say so.
+    probe_specs = param_specs(p_sds, cfg, mesh)
+    flat_fallback_reason = _tensor_sharded_reason(probe_specs)
+    use_flat = flat_fallback_reason is None
+    if not use_flat:
+        print(f"fed_dryrun: use_flat_plane=False ({flat_fallback_reason})")
+
     fed = FedConfig(
         algo=algo, num_clients=4096, cohort_size=cohort, local_steps=local_steps,
         alpha=0.1, eta_l=0.05, eta_g=1.0, participation="fixed",
         weight_decay=1e-4, momentum_dtype=momentum_dtype,
         aggregate_dtype=aggregate_dtype,
-        # this dry-run tensor-shards each client's params over "model"; the
-        # flat plane would concatenate model-sharded leaves (all-gathers),
-        # so the per-leaf tree path is the right lowering here
-        use_flat_plane=False,
+        use_flat_plane=use_flat,
     )
     eng = FederatedEngine(fed, loss_fn)
     eng.analysis_unroll = True
-
-    p_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     pd = jnp.dtype(param_dtype)
     p_sds = jax.tree_util.tree_map(
         lambda x: jax.ShapeDtypeStruct(x.shape, pd)
@@ -127,7 +155,7 @@ def build_and_lower(
     with set_mesh(mesh):
         lowered = fn.lower(state_sds, batches_sds, ids_sds, mask_sds, full_sds)
         compiled = lowered.compile()
-    return compiled, cfg, fed
+    return compiled, cfg, fed, flat_fallback_reason
 
 
 def run(variant: str, *, algo="fedcm", cohort=16, local_steps=2,
@@ -135,7 +163,7 @@ def run(variant: str, *, algo="fedcm", cohort=16, local_steps=2,
         aggregate_dtype="float32", multi_pod=False, quiet=False, save=True) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    compiled, cfg, fed = build_and_lower(
+    compiled, cfg, fed, flat_reason = build_and_lower(
         mesh, algo=algo, cohort=cohort, local_steps=local_steps,
         momentum_dtype=momentum_dtype, param_dtype=param_dtype,
         aggregate_dtype=aggregate_dtype,
@@ -159,6 +187,8 @@ def run(variant: str, *, algo="fedcm", cohort=16, local_steps=2,
         "param_dtype": param_dtype,
         "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
         "chips": n_chips(mesh),
+        "use_flat_plane": fed.use_flat_plane,
+        "flat_fallback_reason": flat_reason,
         "compile_seconds": round(t1 - t0, 2),
         "hlo_flops_per_device": flops,
         "hlo_bytes_per_device": bytes_acc,

@@ -10,12 +10,27 @@ Rounds between evaluations execute as ONE fused ``engine.run_rounds`` scan
 python dispatch only happens with ``--per-round``, kept for A/B timing
 against the fused path (benchmarks/fused_rounds.py measures the gap).
 
+With ``--pipeline-depth D`` / ``--staleness S`` (or ``--async``) the run
+switches to the overlapping-cohort engine ``run_rounds_async``: ONE
+pipelined scan for the whole run, with evaluation device-resident INSIDE
+the scan at the ``--eval-every`` cadence — zero host round-trips between
+round 0 and the final metrics fetch.
+
+``--dryrun`` resolves the full config, writes it (plus the engine's
+payload accounting) to ``benchmarks/artifacts/fed_train_dryrun.json``, and
+exits without training — the artifact is how CLI-flag wiring is asserted
+in tests (a flag that never reaches FedConfig, like the PR-2
+``use_flat_plane`` gap, shows up as a wrong resolved value here).
+
     PYTHONPATH=src python -m repro.launch.fed_train --algo fedcm \
         --clients 100 --cohort 10 --rounds 100 --dirichlet 0.6
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+from pathlib import Path
 
 import numpy as np
 
@@ -27,6 +42,11 @@ from repro.core import FederatedEngine, make_eval_fn
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 from repro.utils.metrics import MetricLogger
+
+DRYRUN_ARTIFACT = (
+    Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+    / "fed_train_dryrun.json"
+)
 
 
 def run_federated(
@@ -43,6 +63,7 @@ def run_federated(
     seed: int = 0,
     echo: bool = True,
     fused: bool = True,
+    async_pipeline: bool = False,
 ):
     """Returns (final_test_acc, history MetricLogger)."""
     x_tr, y_tr, x_te, y_te = make_synthetic_classification(
@@ -61,6 +82,32 @@ def run_federated(
     )
     x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
     acc = 0.0
+    if async_pipeline:
+        # the WHOLE run — cohort overlap, minibatch draws, eval — is one
+        # jitted pipelined scan; eval accuracies come back in the stacked
+        # metrics (−1.0 off-cadence)
+        state, ms = eng.run_rounds_async(
+            state, data, cfg.rounds,
+            eval_every=eval_every, eval_data=(x_te_j, y_te_j),
+            predict_fn=model.apply,
+        )
+        accs = np.asarray(ms.eval_acc)
+        for r in np.flatnonzero(accs >= 0.0):
+            acc = float(accs[r])
+            log.log(round=int(r) + 1, algo=cfg.algo,
+                    loss=round(float(ms.loss[r]), 4),
+                    test_acc=round(acc, 4), n_active=int(ms.n_active[r]),
+                    mb_down=round(float(ms.bytes_down[r]) / 2**20, 2),
+                    mb_up=round(float(ms.bytes_up[r]) / 2**20, 2))
+        if (cfg.pipeline_depth > 1 or not np.any(accs >= 0.0)
+                or (cfg.rounds % eval_every) != 0):
+            # one host-side eval of the RETURNED params: the final round
+            # fell off the eval cadence, or the pipeline drained after the
+            # last in-scan eval (which sees pre-drain params — the
+            # returned state additionally folds the ≤depth−1 cohorts
+            # still in flight)
+            acc = evaluate(state.params, x_te_j, y_te_j)
+        return acc, log
     if fused:
         # eval_every rounds per jitted scan; metrics come back stacked and
         # we log the chunk's final round (same cadence as the --per-round path)
@@ -86,7 +133,7 @@ def run_federated(
     return acc, log
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--algo", default="fedcm",
                     choices=["fedcm", "fedavg", "fedadam", "scaffold", "feddyn", "mimelite"])
@@ -105,17 +152,84 @@ def main() -> int:
     ap.add_argument("--per-round", action="store_true",
                     help="dispatch each round separately (A/B against fused scan)")
     ap.add_argument("--fused-kernel", action="store_true",
-                    help="route local steps through the Pallas fedcm_update kernel")
-    args = ap.parse_args()
+                    help="route the flat-plane update phase through the Pallas "
+                         "fed_direction/server_update kernels")
+    ap.add_argument("--flat-plane", action=argparse.BooleanOptionalAction,
+                    default=FedConfig.use_flat_plane,
+                    help="carry the round state on the ravelled (P,) parameter "
+                         "plane (--no-flat-plane keeps the per-leaf tree path)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="cohorts in flight (>1 switches to the async "
+                         "overlapping-cohort engine; folds are depth-1 rounds stale)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="rounds of momentum staleness the clients descend "
+                         "against (>0 switches to the async engine)")
+    ap.add_argument("--staleness-discount", type=float, default=1.0,
+                    help="FedACG-style per-round-of-staleness fold weight γ")
+    ap.add_argument("--async", dest="async_pipeline", action="store_true",
+                    help="force the async engine even at depth 1 / staleness 0")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="resolve + persist the config artifact and exit "
+                         "without training")
+    return ap
 
-    cfg = FedConfig(
+
+def resolve_config(args: argparse.Namespace) -> FedConfig:
+    """argv → FedConfig.  EVERY engine-relevant flag must be wired here —
+    the dryrun artifact (and tests/test_fed_train_cli.py) assert the
+    resolved values, which is what caught ``use_flat_plane`` silently
+    falling back to its default."""
+    return FedConfig(
         algo=args.algo, num_clients=args.clients, cohort_size=args.cohort,
         local_steps=args.local_steps, alpha=args.alpha, eta_l=args.eta_l,
         eta_g=args.eta_g, participation=args.participation, rounds=args.rounds,
         seed=args.seed, use_fused_kernel=args.fused_kernel,
+        use_flat_plane=args.flat_plane,
+        pipeline_depth=args.pipeline_depth, staleness=args.staleness,
+        staleness_discount=args.staleness_discount,
     )
+
+
+def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
+    """Persist the RESOLVED config (not the argv) so flag-wiring is
+    asserted against what the engine will actually see."""
+    # the wiring contract, asserted here so a --dryrun in CI trips on
+    # regressions even before any test reads the artifact back
+    assert cfg.use_flat_plane == args.flat_plane
+    assert cfg.use_fused_kernel == args.fused_kernel
+    assert cfg.pipeline_depth == args.pipeline_depth
+    assert cfg.staleness == args.staleness
+    payload = {
+        "resolved_config": dataclasses.asdict(cfg),
+        "engine_mode": (
+            "async_pipeline" if (args.async_pipeline or cfg.pipeline_depth > 1
+                                 or cfg.staleness > 0)
+            else ("per_round" if args.per_round else "fused_scan")
+        ),
+        "eval_every": args.eval_every,
+        "dirichlet": args.dirichlet,
+    }
+    DRYRUN_ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
+    DRYRUN_ARTIFACT.write_text(json.dumps(payload, indent=1))
+    return DRYRUN_ARTIFACT
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    use_async = args.async_pipeline or args.pipeline_depth > 1 or args.staleness > 0
+    if args.per_round and use_async:
+        ap.error("--per-round dispatches one round per jit call; the async "
+                 "pipelined engine is a single fused program — drop one of "
+                 "--per-round / --async / --pipeline-depth / --staleness")
+    cfg = resolve_config(args)
+    if args.dryrun:
+        path = write_dryrun_artifact(cfg, args)
+        print(f"dryrun: resolved config written to {path}")
+        return 0
     acc, _ = run_federated(cfg, args.dirichlet, eval_every=args.eval_every,
-                           seed=args.seed, fused=not args.per_round)
+                           seed=args.seed, fused=not args.per_round,
+                           async_pipeline=use_async)
     print(f"\n{args.algo}: final test accuracy = {acc:.4f}")
     return 0
 

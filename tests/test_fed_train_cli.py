@@ -1,0 +1,84 @@
+"""fed_train CLI → FedConfig wiring (the PR-2 ``use_flat_plane`` gap).
+
+The driver builds its FedConfig from argv in ``resolve_config``; a flag
+that parses but never reaches the config silently trains with the default
+(exactly what happened to ``--flat-plane``'s predecessor).  ``--dryrun``
+persists the RESOLVED config to an artifact, so the wiring is asserted
+end-to-end: argv in → artifact out, no training."""
+import json
+
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.launch.fed_train import (
+    DRYRUN_ARTIFACT,
+    build_parser,
+    main,
+    resolve_config,
+)
+
+
+def _resolved(argv):
+    return resolve_config(build_parser().parse_args(argv))
+
+
+def test_flat_plane_flag_wires_through():
+    assert _resolved([]).use_flat_plane is FedConfig.use_flat_plane
+    assert _resolved(["--flat-plane"]).use_flat_plane is True
+    assert _resolved(["--no-flat-plane"]).use_flat_plane is False
+
+
+def test_async_flags_wire_through():
+    cfg = _resolved(["--pipeline-depth", "4", "--staleness", "2",
+                     "--staleness-discount", "0.9"])
+    assert cfg.pipeline_depth == 4
+    assert cfg.staleness == 2
+    assert cfg.staleness_discount == pytest.approx(0.9)
+    assert _resolved([]).pipeline_depth == 1 and _resolved([]).staleness == 0
+
+
+def test_fused_kernel_flag_wires_through():
+    assert _resolved([]).use_fused_kernel is False
+    assert _resolved(["--fused-kernel"]).use_fused_kernel is True
+
+
+def test_dryrun_artifact_records_resolved_config(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    rc = main(["--dryrun", "--no-flat-plane", "--fused-kernel",
+               "--pipeline-depth", "2", "--staleness", "1",
+               "--algo", "scaffold", "--clients", "7"])
+    assert rc == 0
+    got = json.loads(art.read_text())["resolved_config"]
+    assert got["use_flat_plane"] is False
+    assert got["use_fused_kernel"] is True
+    assert got["pipeline_depth"] == 2
+    assert got["staleness"] == 1
+    assert got["algo"] == "scaffold"
+    assert got["num_clients"] == 7
+    assert json.loads(art.read_text())["engine_mode"] == "async_pipeline"
+
+
+def test_per_round_conflicts_with_async():
+    """--per-round (one jit dispatch per round) and the async pipelined
+    engine (one fused program) are mutually exclusive — combining them
+    must error instead of silently dropping --per-round."""
+    for argv in (["--per-round", "--pipeline-depth", "2"],
+                 ["--per-round", "--staleness", "1"],
+                 ["--per-round", "--async"]):
+        with pytest.raises(SystemExit) as e:
+            main(argv + ["--dryrun"])
+        assert e.value.code == 2  # argparse error exit
+
+
+def test_dryrun_artifact_default_mode(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    assert main(["--dryrun"]) == 0
+    got = json.loads(art.read_text())
+    assert got["resolved_config"]["use_flat_plane"] is True
+    assert got["engine_mode"] == "fused_scan"
+    assert main(["--dryrun", "--per-round"]) == 0
+    assert json.loads(art.read_text())["engine_mode"] == "per_round"
+    assert main(["--dryrun", "--async"]) == 0
+    assert json.loads(art.read_text())["engine_mode"] == "async_pipeline"

@@ -236,3 +236,62 @@ def test_flat_engine_bf16_mixed_param_tree():
         jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), newt.params),
         atol=2e-2, rtol=2e-2,
     )
+
+
+# ----------------------------------------------------------------------
+# CohortUplink ring (async pipelined engine's in-flight cohort store)
+# ----------------------------------------------------------------------
+
+
+def _uplink(C, P, val, with_state=True):
+    from repro.core import CohortUplink
+
+    return CohortUplink(
+        delta=jnp.full((C, P), val, jnp.float32),
+        state_delta=jnp.full((C, P), 2 * val, jnp.float32) if with_state else None,
+        extra=None,
+        ids=jnp.arange(C, dtype=jnp.int32),
+        w=jnp.ones((C,), jnp.float32),
+        eta_l=jnp.float32(0.1 * val),
+    )
+
+
+def test_ring_push_rotates_oldest_first():
+    from repro.core import ring_push
+
+    C, P = 4, 11
+    pending = (_uplink(C, P, 1.0), _uplink(C, P, 2.0))  # depth 3 ring: D-1 pending
+    oldest, pending = ring_push(pending, _uplink(C, P, 3.0))
+    np.testing.assert_array_equal(np.asarray(oldest.delta), 1.0)
+    np.testing.assert_array_equal(np.asarray(oldest.state_delta), 2.0)
+    assert len(pending) == 2
+    np.testing.assert_array_equal(np.asarray(pending[0].delta), 2.0)
+    np.testing.assert_array_equal(np.asarray(pending[1].delta), 3.0)
+    # depth 1 (sync schedule): the entry folds the round it launches
+    oldest, empty = ring_push((), _uplink(C, P, 9.0, with_state=False))
+    assert empty == () and oldest.state_delta is None and oldest.extra is None
+    np.testing.assert_array_equal(np.asarray(oldest.delta), 9.0)
+
+
+def test_ring_push_is_scan_carry_compatible():
+    """The rotated tuple must hold its treedef across scan iterations (the
+    steady scan carries it) and work as pure dataflow under jit."""
+    from repro.core import ring_push
+
+    C, P = 2, 5
+
+    def body(carry, x):
+        pending = carry
+        entry = _uplink(C, P, 0.0, with_state=False)._replace(
+            delta=jnp.full((C, P), x, jnp.float32))
+        oldest, pending = ring_push(pending, entry)
+        return pending, jnp.max(oldest.delta)
+
+    init = (_uplink(C, P, -2.0, with_state=False),
+            _uplink(C, P, -1.0, with_state=False))  # depth 3
+    pending, folded = jax.lax.scan(body, init, jnp.arange(5, dtype=jnp.float32))
+    # folds see entries in launch order, D-1 = 2 rounds late
+    np.testing.assert_array_equal(np.asarray(folded), [-2.0, -1.0, 0.0, 1.0, 2.0])
+    # the final pending entries are the last two launches (the drain's input)
+    np.testing.assert_array_equal(np.asarray(pending[0].delta), 3.0)
+    np.testing.assert_array_equal(np.asarray(pending[1].delta), 4.0)

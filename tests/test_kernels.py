@@ -9,7 +9,6 @@ import jax.numpy as jnp
 from repro.kernels.fed_direction.kernel import fed_direction_flat
 from repro.kernels.fed_direction.ops import flat_direction_step
 from repro.kernels.fed_direction.ref import fed_direction_ref
-from repro.kernels.fedcm_update.ops import fedcm_step, fedcm_step_tree
 from repro.kernels.fedcm_update.ref import fedcm_step_ref
 from repro.kernels.server_update.ops import fused_server_step
 from repro.kernels.server_update.ref import server_update_ref
@@ -27,17 +26,24 @@ def _tol(dtype):
 
 
 # ----------------------------------------------------------------------
-# fedcm_update
+# fedcm blend oracle (legacy fedcm_update kernel retired to ref-only: the
+# blend now launches through fed_direction with coefs (η, α, 0, 1−α) —
+# these tests pin that route to Algorithm 2 line 8–9 via the RETAINED
+# fedcm_step_ref oracle, independent of fed_direction's own reference)
 # ----------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("shape", [(5,), (1023,), (64 * 1024 + 3,), (17, 129), (2, 3, 5, 7)])
+def _blend_coefs(alpha, eta):
+    return jnp.asarray([eta, alpha, 0.0, 1.0 - alpha], jnp.float32)
+
+
+@pytest.mark.parametrize("n", [5, 1023, 64 * 1024 + 3])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_fedcm_update_sweep(shape, dtype):
-    x = jnp.asarray(RNG.normal(size=shape), dtype)
-    g = jnp.asarray(RNG.normal(size=shape), dtype)
-    d = jnp.asarray(RNG.normal(size=shape), dtype)
-    out = fedcm_step(x, g, d, 0.1, 0.05)
+def test_fed_direction_reproduces_fedcm_blend(n, dtype):
+    x = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    g = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    d = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    out = fed_direction_flat(x, g, (d,), _blend_coefs(0.1, 0.05))
     ref = fedcm_step_ref(x, g, d, 0.1, 0.05)
     assert out.dtype == x.dtype
     np.testing.assert_allclose(
@@ -46,41 +52,26 @@ def test_fedcm_update_sweep(shape, dtype):
 
 
 @pytest.mark.parametrize("alpha,eta", [(0.0, 0.1), (1.0, 0.1), (0.1, 0.0), (0.37, 1.3)])
-def test_fedcm_update_hyperparam_edges(alpha, eta):
+def test_fedcm_blend_hyperparam_edges(alpha, eta):
     x = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
     g = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
     d = jnp.asarray(RNG.normal(size=(333,)), jnp.float32)
     np.testing.assert_allclose(
-        fedcm_step(x, g, d, alpha, eta), fedcm_step_ref(x, g, d, alpha, eta),
+        fed_direction_flat(x, g, (d,), _blend_coefs(alpha, eta)),
+        fedcm_step_ref(x, g, d, alpha, eta),
         rtol=1e-6, atol=1e-6,
     )
 
 
-def test_fedcm_update_tree_matches_leafwise():
-    tree = {
-        "a": jnp.asarray(RNG.normal(size=(13, 7)), jnp.float32),
-        "b": [jnp.asarray(RNG.normal(size=(5,)), jnp.float32),
-              jnp.asarray(RNG.normal(size=(2, 3)), jnp.bfloat16)],
-    }
-    g = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), tree)
-    m = jax.tree_util.tree_map(lambda x: 0.5 * jnp.ones_like(x), tree)
-    out = fedcm_step_tree(tree, g, m, 0.2, 0.1)
-    ref = jax.tree_util.tree_map(lambda x, gg, mm: fedcm_step_ref(x, gg, mm, 0.2, 0.1), tree, g, m)
-    for o, r in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(ref)):
-        assert o.dtype == r.dtype
-        np.testing.assert_allclose(
-            np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=2e-2, atol=2e-2
-        )
-
-
-def test_fedcm_update_bf16_params_keep_f32_momentum_precision():
+def test_fedcm_blend_bf16_params_keep_f32_momentum_precision():
     """Regression (dtype fidelity): bf16 params with f32 g/Δ must match the
-    f32 reference — the old wrapper cast g/Δ to bf16 BEFORE the kernel,
-    truncating the momentum the kernel body was about to upcast anyway."""
+    f32 reference — the retired wrapper once cast g/Δ to bf16 BEFORE the
+    kernel, truncating the momentum the body was about to upcast anyway.
+    The fed_direction route must preserve the contract."""
     x = jnp.asarray(RNG.normal(size=(4097,)), jnp.bfloat16)
     g = jnp.asarray(RNG.normal(size=(4097,)), jnp.float32)
     d = jnp.asarray(RNG.normal(size=(4097,)) * 1e-3, jnp.float32)
-    out = fedcm_step(x, g, d, 0.1, 0.05)
+    out = fed_direction_flat(x, g, (d,), _blend_coefs(0.1, 0.05))
     ref = fedcm_step_ref(x, g, d, 0.1, 0.05)  # blends in full f32
     assert out.dtype == jnp.bfloat16
     # the kernel must agree with the f32-blend reference EXACTLY (both round
@@ -90,29 +81,14 @@ def test_fedcm_update_bf16_params_keep_f32_momentum_precision():
     )
 
 
-def test_fedcm_update_scalar_and_single_element_leaves():
-    """Whole-tree launch with scalar () and single-element (1,) leaves —
-    the degenerate offsets/padding of the flat layout."""
-    tree = {"s": jnp.float32(2.0), "one": jnp.ones((1,), jnp.float32),
-            "m": jnp.asarray(RNG.normal(size=(9, 5)), jnp.float32)}
-    g = jax.tree_util.tree_map(jnp.ones_like, tree)
-    m = jax.tree_util.tree_map(lambda x: 0.25 * jnp.ones_like(x), tree)
-    out = fedcm_step_tree(tree, g, m, 0.3, 0.1)
-    ref = jax.tree_util.tree_map(
-        lambda x, gg, mm: fedcm_step_ref(x, gg, mm, 0.3, 0.1), tree, g, m)
-    for o, r in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(ref)):
-        assert o.shape == r.shape
-        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-6, atol=1e-6)
-
-
-def test_fedcm_update_empty_tail_padding_is_dropped():
+def test_fedcm_blend_empty_tail_padding_is_dropped():
     """Non-block-multiple sizes: the padded tail must never leak into the
     output (output length and values exact for n = 1 and n = block+1)."""
     for n in (1, 64 * 1024 + 1):
         x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
         g = jnp.ones((n,), jnp.float32)
         d = jnp.zeros((n,), jnp.float32)
-        out = fedcm_step(x, g, d, 1.0, 0.5)
+        out = fed_direction_flat(x, g, (d,), _blend_coefs(1.0, 0.5))
         assert out.shape == (n,)
         np.testing.assert_allclose(np.asarray(out), np.asarray(x) - 0.5,
                                    rtol=1e-6, atol=1e-6)
@@ -216,7 +192,7 @@ def test_server_update_sweep(C, P, masked):
     x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
     m = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
     out = fused_server_step(deltas, wn, x, m, 0.9, 0.1, -2.0)
-    coefs = jnp.asarray([0.9, 0.1, -2.0], jnp.float32)
+    coefs = jnp.asarray([0.9, 0.1, -2.0, 1.0], jnp.float32)
     ref = server_update_ref(deltas, wn, x, m, coefs)
     for o, r in zip(out, ref):
         assert o.shape == (P,)
@@ -240,6 +216,31 @@ def test_server_update_momentum_dtype_override():
         deltas, wn, x, m, 0.0, -2.0, 1.0, m_dtype=jnp.bfloat16)
     assert new_m.dtype == jnp.bfloat16
     assert new_x.dtype == jnp.float32 and mean.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("gamma", [0.0, 0.5, 0.9, 1.0])
+def test_server_update_staleness_discount(gamma):
+    """The SMEM discount scalar scales the EMA/step inputs but NOT the
+    emitted mean (metrics must see the cohort's actual delta)."""
+    C, P = 3, 777
+    deltas = jnp.asarray(RNG.normal(size=(C, P)), jnp.float32)
+    wn = jnp.full((C,), 1.0 / C, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    new_x, new_m, mean = fused_server_step(
+        deltas, wn, x, m, 0.7, -1.5, 2.0, discount=gamma)
+    ref = server_update_ref(
+        deltas, wn, x, m, jnp.asarray([0.7, -1.5, 2.0, gamma], jnp.float32))
+    for o, r in zip((new_x, new_m, mean), ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-5, atol=2e-6)
+    # mean is undiscounted: recompute from raw inputs
+    raw_mean = np.tensordot(np.asarray(wn), np.asarray(deltas), axes=(0, 0))
+    np.testing.assert_allclose(np.asarray(mean), raw_mean, rtol=2e-5, atol=2e-6)
+    if gamma == 1.0:  # γ=1 must be bitwise the undiscounted form
+        base = fused_server_step(deltas, wn, x, m, 0.7, -1.5, 2.0)
+        for o, b in zip((new_x, new_m, mean), base):
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(b))
 
 
 # ----------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Fused multi-round engine (engine.run_rounds) regression tests.
+"""Fused multi-round engine (engine.run_rounds / run_rounds_async) tests.
 
 * trajectory equivalence: run_rounds(n) must reproduce the sequential
   run_round × n trajectory (params, server momentum, metrics) to tolerance
@@ -9,8 +9,18 @@
 * fused Pallas kernel path (cfg.use_fused_kernel): matches the unfused
   tree_map arithmetic (ref.py is the kernel's own oracle in test_kernels).
 * client_sharding: constraining the cohort axis changes nothing numerically.
+* async pipelined engine (run_rounds_async): the degenerate schedule
+  (pipeline_depth=1, staleness=0) must be EXACTLY run_rounds — f32
+  bitwise — for every algorithm on both the jnp and kernel paths; depth>1
+  fills/folds/drains correctly; staleness>0 still converges on a
+  heterogeneous quadratic toy problem.
+* bf16 master plane: sequential run_round and fused run_rounds share the
+  f32 master-plane carry, so their bf16 trajectories stay within
+  f32-noise tolerance (the legacy per-boundary re-rounding was a bf16 ulp
+  per round — the bound here would catch its return).
 """
 from dataclasses import replace
+from types import SimpleNamespace
 
 import numpy as np
 import pytest
@@ -23,6 +33,7 @@ from repro.configs.base import FedConfig
 from repro.core import FederatedEngine
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
+from repro.utils.trees import tree_cast
 
 N_ROUNDS = 5
 
@@ -139,15 +150,20 @@ def test_fused_server_kernel_honors_aggregate_dtype():
     assert diff > 0.0
 
 
-def test_tree_path_fused_kernel_still_matches():
-    """Legacy tree-path kernel route (fedcm_step_tree) stays correct."""
+def test_tree_path_ignores_fused_kernel_flag():
+    """The legacy whole-tree fedcm_update launch is RETIRED: on the tree
+    path ``use_fused_kernel`` is inert, so the trajectories must be
+    bitwise identical (any reappearing kernel route would show up as the
+    old tolerance-level drift)."""
     cfg, eng, data, model = _setup("fedcm")
     cfg_t = replace(cfg, use_flat_plane=False)
     eng_t = FederatedEngine(cfg_t, eng.loss_fn, batch_size=8)
     eng_tk = FederatedEngine(replace(cfg_t, use_fused_kernel=True), eng.loss_fn, batch_size=8)
     s_ref, _ = eng_t.run_rounds(_fresh_state(eng_t, model), data, 3)
     s_k, _ = eng_tk.run_rounds(_fresh_state(eng_tk, model), data, 3)
-    _assert_trees_close(s_ref.params, s_k.params, rtol=1e-5, atol=1e-7)
+    for a, b in zip(jax.tree_util.tree_leaves(s_ref.params),
+                    jax.tree_util.tree_leaves(s_k.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_client_sharding_constraint_is_numerically_inert():
@@ -174,3 +190,254 @@ def test_run_rounds_bernoulli_participation():
     assert np.all(np.asarray(ms.n_active) >= 1)
     for leaf in jax.tree_util.tree_leaves(st.params):
         assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ----------------------------------------------------------------------
+# async pipelined engine (run_rounds_async)
+# ----------------------------------------------------------------------
+
+
+def _assert_state_equal(a, b, check_master=False):
+    """f32-exact (bitwise) equality of two FedStates' learned state."""
+    pairs = [(a.params, b.params), (a.server.momentum, b.server.momentum),
+             (a.client_states, b.client_states)]
+    if check_master:
+        pairs.append((a.master, b.master))
+    for ta, tb in pairs:
+        for la, lb in zip(jax.tree_util.tree_leaves(ta), jax.tree_util.tree_leaves(tb)):
+            np.testing.assert_array_equal(
+                np.asarray(la, np.float32), np.asarray(lb, np.float32)
+            )
+
+
+@pytest.mark.parametrize(
+    "algo", ["fedcm", "mimelite", "fedavg", "fedadam", "scaffold", "feddyn"]
+)
+def test_async_depth1_is_exactly_run_rounds(algo):
+    """run_rounds_async(D=1, S=0) IS the sync schedule: every algorithm's
+    trajectory AND per-round metrics must match run_rounds f32-EXACTLY
+    (bitwise) — the ring degenerates to push-then-pop of the same slot."""
+    cfg, eng, data, model = _setup(algo)
+    s_sync, m_sync = eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
+    s_async, m_async = eng.run_rounds_async(
+        _fresh_state(eng, model), data, N_ROUNDS, pipeline_depth=1, staleness=0
+    )
+    _assert_state_equal(s_sync, s_async)
+    assert int(s_async.server.round) == N_ROUNDS
+    for field in ("loss", "n_active", "delta_norm", "momentum_norm",
+                  "eta_l", "bytes_down", "bytes_up"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(m_sync, field)),
+            np.asarray(getattr(m_async, field)), err_msg=field,
+        )
+    assert np.all(np.asarray(m_async.folded) == 1.0)
+
+
+@pytest.mark.parametrize("algo", ["fedcm", "scaffold"])
+def test_async_depth1_kernel_path_is_exactly_run_rounds(algo):
+    """Same degenerate-schedule contract on the fused-kernel path (the
+    staleness-discount SMEM scalar is 1.0 there — must stay exact)."""
+    cfg, eng, data, model = _setup(algo, use_fused_kernel=True)
+    s_sync, _ = eng.run_rounds(_fresh_state(eng, model), data, 3)
+    s_async, _ = eng.run_rounds_async(
+        _fresh_state(eng, model), data, 3, pipeline_depth=1, staleness=0
+    )
+    _assert_state_equal(s_sync, s_async)
+
+
+@pytest.mark.parametrize("use_fused_kernel", [False, True])
+def test_async_pipeline_fill_fold_drain(use_fused_kernel):
+    """D>1: the first D−1 rounds launch without folding (pipeline fill),
+    every later round folds exactly one cohort, and the drain applies the
+    leftover in-flight work (drain=False must differ — work discarded)."""
+    cfg, eng, data, model = _setup("fedcm", use_fused_kernel=use_fused_kernel)
+    D = 3
+    st, ms = eng.run_rounds_async(_fresh_state(eng, model), data, 6,
+                                  pipeline_depth=D, staleness=0)
+    folded = np.asarray(ms.folded)
+    np.testing.assert_array_equal(folded, [0, 0, 1, 1, 1, 1])
+    assert np.all(np.asarray(ms.delta_norm)[:D - 1] == 0.0)
+    assert np.all(np.asarray(ms.delta_norm)[D - 1:] > 0.0)
+    assert int(st.server.round) == 6
+    st_nodrain, _ = eng.run_rounds_async(_fresh_state(eng, model), data, 6,
+                                         pipeline_depth=D, staleness=0,
+                                         drain=False)
+    diff = sum(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                               jax.tree_util.tree_leaves(st_nodrain.params)))
+    assert diff > 0.0
+    for s in (st, st_nodrain):
+        for leaf in jax.tree_util.tree_leaves(s.params):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_async_shorter_than_warmup_run():
+    """n_rounds < D−1: nothing ever folds in-scan — the whole run is
+    unrolled pipeline fill and the ring holds every launch; the drain must
+    still apply each of them (in launch order)."""
+    cfg, eng, data, model = _setup("fedcm")
+    st, ms = eng.run_rounds_async(_fresh_state(eng, model), data, 2,
+                                  pipeline_depth=4, staleness=0)
+    np.testing.assert_array_equal(np.asarray(ms.folded), [0, 0])
+    # both launched cohorts were drained: params moved off the init point
+    st0 = _fresh_state(eng, model)
+    diff = sum(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                               jax.tree_util.tree_leaves(st0.params)))
+    assert diff > 0.0
+
+
+def test_async_requires_flat_plane_and_validates_args():
+    cfg, eng, data, model = _setup("fedcm")
+    eng_tree = FederatedEngine(replace(cfg, use_flat_plane=False),
+                               eng.loss_fn, batch_size=8)
+    with pytest.raises(ValueError, match="use_flat_plane"):
+        eng_tree.run_rounds_async(_fresh_state(eng_tree, model), data, 2)
+    with pytest.raises(ValueError):
+        eng.run_rounds_async(_fresh_state(eng, model), data, 0)
+    with pytest.raises(ValueError):
+        eng.run_rounds_async(_fresh_state(eng, model), data, 2, pipeline_depth=0)
+    with pytest.raises(ValueError):
+        eng.run_rounds_async(_fresh_state(eng, model), data, 2, staleness=-1)
+    with pytest.raises(ValueError, match="eval_every"):
+        eng.run_rounds_async(_fresh_state(eng, model), data, 2, eval_every=1)
+
+
+def test_async_is_one_trace_and_caches():
+    _, eng, data, model = _setup("fedcm")
+    assert eng.run_rounds_async_traces == 0
+    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=2)
+    assert eng.run_rounds_async_traces == 1
+    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=2)
+    assert eng.run_rounds_async_traces == 1  # same statics: cached
+    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=4)
+    assert eng.run_rounds_async_traces == 2  # new static depth: one retrace
+
+
+def test_async_inscan_eval_cadence():
+    """eval_every moves eval inside the scan: accuracies appear exactly on
+    cadence, −1.0 sentinels elsewhere, and the on-cadence values agree
+    with the host-side make_eval_fn on the same params."""
+    from repro.core import make_eval_fn
+
+    cfg, eng, data, model = _setup("fedcm")
+    x_te = np.asarray(data.client_x.reshape(-1, data.client_x.shape[-1]))[:64]
+    y_te = np.asarray(data.client_y.reshape(-1))[:64]
+    st, ms = eng.run_rounds_async(
+        _fresh_state(eng, model), data, 6, pipeline_depth=2, eval_every=3,
+        eval_data=(x_te, y_te), predict_fn=model.apply, eval_batch_size=16,
+    )
+    accs = np.asarray(ms.eval_acc)
+    on = np.arange(6) % 3 == 2
+    assert np.all(accs[~on] == -1.0)
+    assert np.all(accs[on] >= 0.0)
+    # NOTE: in-scan eval sees the pre-drain params of its round; the final
+    # on-cadence eval runs at t=5 BEFORE the drain fold, so compare
+    # against the no-drain trajectory's params
+    st_nodrain, _ = eng.run_rounds_async(
+        _fresh_state(eng, model), data, 6, pipeline_depth=2, drain=False
+    )
+    host_eval = make_eval_fn(model.apply, batch_size=16)
+    np.testing.assert_allclose(
+        accs[-1], host_eval(st_nodrain.params, x_te, y_te), rtol=1e-6
+    )
+
+
+def _quadratic_setup(staleness_discount=1.0, **cfg_kw):
+    """Heterogeneous quadratic toy: client i holds points around its own
+    center c_i; loss(w, batch) = ½·mean‖w − x‖² so the global optimum is
+    the mean of all client centers.  Convergence here isolates the round
+    machinery from model nonconvexity."""
+    rng = np.random.default_rng(0)
+    N, n_per, d = 12, 32, 6
+    # heterogeneous client centers around a NONZERO global mean — the
+    # zeros init must be far from w* so convergence is measurable
+    centers = 3.0 + rng.normal(size=(N, 1, d)) * 2.0
+    pts = centers + 0.1 * rng.normal(size=(N, n_per, d))
+    data = SimpleNamespace(client_x=jnp.asarray(pts, jnp.float32),
+                           client_y=jnp.zeros((N, n_per), jnp.int32))
+
+    def quad_loss(params, batch):
+        diff = params["w"][None, :] - batch["x"]
+        return 0.5 * jnp.mean(jnp.sum(diff * diff, axis=-1))
+
+    base = dict(algo="fedcm", num_clients=N, cohort_size=4, local_steps=4,
+                participation="fixed", eta_l=0.2, eta_l_decay=1.0,
+                weight_decay=0.0, staleness_discount=staleness_discount)
+    base.update(cfg_kw)
+    cfg = FedConfig(**base)
+    eng = FederatedEngine(cfg, quad_loss, batch_size=8)
+    w_star = np.asarray(pts.reshape(-1, d).mean(axis=0))
+    state = eng.init({"w": jnp.zeros((d,), jnp.float32)}, jax.random.PRNGKey(3))
+    return eng, data, state, w_star
+
+
+@pytest.mark.parametrize("depth,stale", [(2, 1), (4, 2)])
+def test_async_staleness_converges_on_quadratic(depth, stale):
+    """Staleness>0 convergence smoke (the paper's robustness claim carried
+    to the async schedule): overlapped cohorts descending against stale
+    momentum still drive the quadratic toy to its optimum."""
+    eng, data, state, w_star = _quadratic_setup(staleness_discount=0.9)
+    d0 = float(np.linalg.norm(w_star))  # ‖w_0 − w*‖, w_0 = 0
+    state, ms = eng.run_rounds_async(state, data, 80, pipeline_depth=depth,
+                                     staleness=stale)
+    w = np.asarray(state.params["w"])
+    assert np.all(np.isfinite(w))
+    d_final = float(np.linalg.norm(w - w_star))
+    assert d_final < 0.15 * d0, (d_final, d0)
+    # and the loss decayed toward the minibatch-variance floor
+    losses = np.asarray(ms.loss)
+    assert losses[-1] < 0.25 * losses[0]
+
+
+# ----------------------------------------------------------------------
+# bf16 master plane (run_round vs run_rounds divergence regression)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_fused_kernel", [False, True])
+def test_bf16_run_round_matches_run_rounds_master_plane(use_fused_kernel):
+    """Sequential run_round must continue the SAME f32 master planes the
+    run_rounds scan carries (FedState.master), so their bf16 trajectories
+    stay within an occasional single-ulp bf16 rounding flip of each other
+    (f32-level noise pushed across a rounding boundary; ≤5e-4 here).  The
+    legacy behaviour re-rounded the carried state to bf16 at EVERY
+    run_round boundary — a ~4e-3 divergence that this bound would catch
+    coming back."""
+    cfg, eng, data, model = _setup("fedcm", use_fused_kernel=use_fused_kernel)
+    p_bf16 = tree_cast(model.init(jax.random.PRNGKey(0)), jnp.bfloat16)
+
+    st = eng.init(p_bf16, jax.random.PRNGKey(1))
+    assert st.master is not None  # sub-f32 leaves attach the master planes
+    for _ in range(4):
+        st, _ = eng.run_round(st, data)
+    st_f, _ = eng.run_rounds(eng.init(p_bf16, jax.random.PRNGKey(1)), data, 4)
+    assert st_f.master is not None
+    for a, b in zip(jax.tree_util.tree_leaves((st.params, st.server.momentum)),
+                    jax.tree_util.tree_leaves((st_f.params, st_f.server.momentum))):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0, atol=5e-4)
+
+    # the re-rounding contract can't silently widen: stripping the master
+    # (the legacy behaviour) must show the bf16-ulp boundary divergence
+    st_legacy = eng.init(p_bf16, jax.random.PRNGKey(1))._replace(master=None)
+    for _ in range(4):
+        st_legacy, _ = eng.run_round(st_legacy, data)
+        st_legacy = st_legacy._replace(master=None)
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(st_legacy.params),
+                               jax.tree_util.tree_leaves(st_f.params)))
+    assert diff > 5e-4, diff
+
+
+def test_f32_states_carry_no_master():
+    """All-f32 trees must NOT pay for the master planes (the ravel is
+    exact; treedef stability keeps the trace cache warm)."""
+    cfg, eng, data, model = _setup("fedcm")
+    st = eng.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    assert st.master is None
+    st, _ = eng.run_round(st, data)
+    assert st.master is None
+    st, _ = eng.run_rounds(st, data, 2)
+    assert st.master is None
