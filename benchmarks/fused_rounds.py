@@ -41,6 +41,12 @@ Three workloads, all in the artifact:
   judged on the drift-robust ``*_vs_sync_median`` pairwise ratio — on a
   shared 2-core container single ratios swing ±8%), so the mode is free
   until a multi-host mesh gives the overlap something to hide.
+* ``algo_sweep``: rounds/s for EVERY registered algorithm
+  (``repro.core.list_algorithms``) on the flat+kernel path — the per-PR
+  record that each spec's declarative routing (direction row →
+  ``fed_direction``, fold rows → ``server_update``, pure post-steps)
+  actually executes, and what each costs relative to fedcm.  A spec that
+  silently falls off the kernel route shows up here as an outlier.
 
 Timing is interleaved min-of-N (alternating engines) so slow drift on a
 shared host cannot bias one path.  Artifact:
@@ -61,7 +67,7 @@ from pathlib import Path
 import jax
 
 from repro.configs.base import FedConfig
-from repro.core import FederatedEngine
+from repro.core import FederatedEngine, list_algorithms
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 
@@ -217,12 +223,62 @@ def _measure_async(rounds, alts, quiet, depths=(1, 2, 4), scan_unroll=2):
     return result
 
 
+def _measure_algo_sweep(rounds, quiet, dims=(32, 64, 64, 10), cohort=8, K=2, B=16):
+    """rounds/s per REGISTERED algorithm, flat plane + fused kernels.
+
+    One timed fused scan per algorithm (compile excluded) on a small
+    shared shape — the point is per-algorithm relative cost and that the
+    registry-driven kernel routing executes for every spec, not absolute
+    throughput (the other workloads own that).  Emits rounds/s per
+    algorithm plus each one's ratio to fedcm."""
+    x, y, *_ = make_synthetic_classification(
+        n_classes=10, dim=dims[0], n_train=6400, n_test=10
+    )
+    model = mlp_classifier(dims)
+    loss_fn = classification_loss(model.apply)
+    result = {"workload": {
+        "num_clients": 64, "cohort_size": cohort, "local_steps": K,
+        "batch_size": B, "rounds": rounds,
+        "model": f"mlp {len(dims) - 1} layers ({2 * (len(dims) - 1)} leaves)",
+        "path": "flat + fused kernels (use_fused_kernel=True)",
+    }, "rounds_per_s": {}}
+    for algo in list_algorithms():
+        cfg = FedConfig(algo=algo, num_clients=64, cohort_size=cohort,
+                        local_steps=K, participation="fixed",
+                        use_fused_kernel=True)
+        eng = FederatedEngine(cfg, loss_fn, batch_size=B)
+        data = FederatedData(x, y, cfg.num_clients, seed=0)
+
+        def fresh():
+            return eng.init(model.init(jax.random.PRNGKey(0)),
+                            jax.random.PRNGKey(1))
+
+        st, _ = eng.run_rounds(fresh(), data, rounds)  # warm/compile
+        _block(st)
+        t0 = time.perf_counter()
+        st, _ = eng.run_rounds(fresh(), data, rounds)
+        _block(st)
+        dt = time.perf_counter() - t0
+        result["rounds_per_s"][algo] = round(rounds / dt, 2)
+    base = result["rounds_per_s"].get("fedcm") or 1.0
+    result["vs_fedcm"] = {
+        a: round(r / base, 2) for a, r in result["rounds_per_s"].items()
+    }
+    if not quiet:
+        print(f"== algo_sweep ({result['workload']['model']}, C={cohort}, "
+              f"K={K}, kernel path) ==")
+        for a, r in sorted(result["rounds_per_s"].items()):
+            print(f"  {a:<12} {r:>8} rounds/s  ({result['vs_fedcm'][a]}x fedcm)")
+    return result
+
+
 def main(rounds: int = 60, alts: int = 8, quiet: bool = False) -> dict:
     result = {
         name: _measure(name, rounds=rounds, alts=alts, quiet=quiet, **wl)
         for name, wl in WORKLOADS.items()
     }
     result["async_pipeline"] = _measure_async(rounds, alts, quiet)
+    result["algo_sweep"] = _measure_algo_sweep(rounds, quiet)
     # legacy top-level keys mirror the headline workload
     head = result["update_bound"]
     for k in ("sequential_s", "flat_fused_s", "tree_fused_s", "speedup",

@@ -185,7 +185,12 @@ SHAPES: Dict[str, ShapeConfig] = {
 class FedConfig:
     """Federated round configuration (paper §6.1 defaults)."""
 
-    algo: str = "fedcm"  # fedcm | fedavg | fedadam | scaffold | feddyn | mimelite
+    # any name in the algorithm registry (repro.core.registry) — builtins:
+    # fedcm | fedavg | fedadam | scaffold | feddyn | mimelite | fedavgm |
+    # fedadagrad | fedyogi | fedacg; resolved (and validated) by
+    # get_algorithm at engine construction.  ``--list-algos`` on
+    # launch/fed_train prints each spec's state planes + kernel routing.
+    algo: str = "fedcm"
     num_clients: int = 100
     cohort_size: int = 10  # |S|
     local_steps: int = 10  # K
@@ -199,6 +204,10 @@ class FedConfig:
     adam_tau: float = 1e-2
     # FedDyn
     feddyn_alpha: float = 0.01
+    # FedACG-style server acceleration: lookahead/momentum coefficient λ of
+    # the registered "fedacg" spec (m' = λ·m + Δ_{t+1}; the server steps
+    # along Δ_{t+1} + λ·m')
+    acg_lambda: float = 0.85
     # participation model: "fixed" = exactly cohort_size w/o replacement,
     # "bernoulli" = each client independently with prob cohort_size/num_clients
     participation: str = "fixed"

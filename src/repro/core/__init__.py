@@ -1,4 +1,12 @@
-"""FedCM core: the paper's algorithm + baselines + round engine."""
+"""FedCM core: the declarative algorithm registry + round engine.
+
+``repro.core.registry`` is the public algorithm API: one ``AlgorithmSpec``
+(client-direction coefficient row, server-fold coefficient rows, state-
+plane flags) drives the tree path, the flat plane, the fused Pallas
+kernels, and the async pipelined ring.  ``repro.core.algorithms`` holds
+the builtin spec definitions; ``@register_algorithm`` adds new ones as
+pure data.
+"""
 from repro.core.algorithms import (
     ALGORITHMS,
     Algorithm,
@@ -24,21 +32,39 @@ from repro.core.engine import (
     sample_cohort,
 )
 from repro.core.flat import CohortUplink, FlatSpec, LeafSpec, ring_push
+from repro.core.registry import (
+    AlgorithmSpec,
+    DirectionRow,
+    FoldPass,
+    describe_algorithm,
+    list_algorithms,
+    register_algorithm,
+    routing_table_md,
+    unregister_algorithm,
+)
 
 __all__ = [
     "ALGORITHMS",
     "Algorithm",
+    "AlgorithmSpec",
     "ClientOutputs",
     "CohortUplink",
+    "DirectionRow",
     "FlatClientOutputs",
     "FlatMaster",
     "FlatSpec",
+    "FoldPass",
     "LeafSpec",
     "ServerState",
     "client_state_init",
+    "describe_algorithm",
     "sparse_client_finalize",
     "get_algorithm",
+    "list_algorithms",
+    "register_algorithm",
+    "routing_table_md",
     "server_init",
+    "unregister_algorithm",
     "AsyncRoundMetrics",
     "FederatedEngine",
     "FedState",

@@ -1,174 +1,91 @@
-"""Federated optimization algorithms (the paper's contribution + baselines).
+"""Builtin federated algorithms as registry specs (paper + baselines + family).
 
 Algorithm 2 of the paper (FedCM) and every baseline it compares against —
 FedAvg [McMahan+17], FedAdam [Reddi+20], SCAFFOLD [Karimireddy+20b],
-FedDyn [Acar+21] — plus MimeLite [Karimireddy+20a] from Appendix A, under
-one interface consumed by the round engine (``repro.core.engine``).
-
-Design: an algorithm is four pure pieces.
-
-* ``server_init(params)``          -> ServerState (momentum Δ_t, adam moments, …)
-* ``direction(bcast, cst, x, x0, g)`` -> the per-local-step update direction v
-  (FedCM line 8: ``v = α·g + (1−α)·Δ_t``; SCAFFOLD: ``g − c_i + c``; …)
-* ``client_finalize(...)``         -> per-client uplink extras + client-state delta
-* ``server_update(...)``           -> new params + ServerState from the aggregate
+FedDyn [Acar+21], MimeLite [Karimireddy+20a] — plus the wider
+momentum-corrected family the registry makes cheap to add: FedAvgM
+[Hsu+19] (server heavy-ball), FedAdagrad / FedYogi [Reddi+20] (adaptive
+server optimizers), and FedACG-style Nesterov server acceleration
+[Kim+22, arXiv:2201.03172].  Every algorithm is an ``AlgorithmSpec``
+(``repro.core.registry``): a client-direction coefficient row, server-fold
+coefficient rows (+ optional pure post-step), and state-plane flags — the
+engine contains zero per-algorithm branches.
 
 The *paper-faithful* convention (appendix C.2) is used throughout: the
-pseudo-gradient is ``Δ_{t+1} = −(1/(η_l·K)) · mean_i(x_{i,K} − x_t)`` and the
-server applies ``x_{t+1} = x_t − (η_g·η_l·K)·Δ_{t+1}``, so ``η_g = 1``
-corresponds to plain client-model averaging.  FedAdam applies its adaptive
-update to the pseudo-gradient with an absolute server lr (η_g = 0.1 in the
-paper).
+pseudo-gradient is ``Δ_{t+1} = −(1/(η_l·K)) · mean_i(x_{i,K} − x_t)`` and
+the server step on it is ``η_g·η_l·K``, so ``η_g = 1`` corresponds to
+plain client-model averaging.  The adaptive server methods (FedAdam /
+FedAdagrad / FedYogi) apply their update to the pseudo-gradient with an
+absolute server lr (η_g = 0.1 in the paper).
 
-Statelessness matters: FedCM/FedAvg/FedAdam/MimeLite keep NO per-client
-state (``client_state_init`` is None); SCAFFOLD and FedDyn keep per-client
-control variates, which is exactly what the paper blames for their
-degradation at 2% participation — the engine stores them stacked (N, …) and
-leaves non-participants stale, reproducing that failure mode honestly.
+Statelessness matters: FedCM/FedAvg/FedAdam/MimeLite/FedAvgM/FedACG keep
+NO per-client state; SCAFFOLD and FedDyn keep per-client control variates,
+which is exactly what the paper blames for their degradation at 2%
+participation — the engine stores them stacked ``(N, …)`` and leaves
+non-participants stale, reproducing that failure mode honestly.
 
-Flat fast path: every piece below is *array-polymorphic* — a bare jax
-array is a single-leaf pytree, so ``direction``/``server_update`` run
-unchanged on the flat ``(P,)`` parameter plane (``repro.core.flat``).  The
-flat-only additions are ``FlatClientOutputs`` (optional planes: algorithms
-that keep no client state / full-batch grad carry ``None`` instead of a
-materialized ``(C, P)`` zeros plane) and ``sparse_client_finalize`` which
-produces them with the same op order as the tree finalizers, so the two
-paths stay bitwise-comparable (tests/test_flat.py holds them to it).
+Flat fast path: every spec interpreter is *array-polymorphic* — a bare jax
+array is a single-leaf pytree, so ``spec.direction``/``spec.server_update``
+run unchanged on the flat ``(P,)`` parameter plane (``repro.core.flat``).
+The flat-only additions are ``FlatClientOutputs`` (optional planes:
+algorithms without client state / full-batch grads carry ``None`` instead
+of a materialized ``(C, P)`` zeros plane) and ``sparse_client_finalize``
+which produces them with the same op order as the tree finalizer, so the
+two paths stay bitwise-comparable (tests/test_flat.py holds them to it).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.utils.trees import (
-    tree_add,
-    tree_axpy,
-    tree_scale,
-    tree_sub,
-    tree_zeros_like,
+from repro.core.registry import (  # noqa: F401  (re-exported public API)
+    Algorithm,
+    AlgorithmSpec,
+    ClientOutputs,
+    DirectionRow,
+    FoldPass,
+    ServerState,
+    client_state_init,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+    server_init,
 )
+from repro.utils.trees import tree_axpy, tree_scale, tree_sub
 
 
-class ServerState(NamedTuple):
-    """Server-side state shared by all algorithms (unused leaves = zeros)."""
+class _AlgorithmsView:
+    """Read-only dict-like view of the registry (back-compat for the old
+    module-level ``ALGORITHMS`` dict)."""
 
-    momentum: Any  # FedCM Δ_t / FedAdam m / MimeLite m / FedDyn h
-    second_moment: Any  # FedAdam v
-    round: jax.Array  # int32 round counter t
+    def __getitem__(self, name: str) -> AlgorithmSpec:
+        return get_algorithm(name)
 
+    def __contains__(self, name: str) -> bool:
+        return name in list_algorithms()
 
-class ClientOutputs(NamedTuple):
-    delta: Any  # x_{i,K} − x_t  (the uplink payload of every algorithm)
-    state_delta: Any  # per-client state update (SCAFFOLD Δc_i, FedDyn Δλ_i) or zeros
-    extra: Any  # extra uplink pytree (MimeLite full-batch grad) or zeros
+    def __iter__(self):
+        return iter(list_algorithms())
 
+    def __len__(self) -> int:
+        return len(list_algorithms())
 
-class Algorithm(NamedTuple):
-    name: str
-    needs_client_state: bool
-    needs_momentum_broadcast: bool
-    needs_full_grad: bool  # MimeLite: full-batch grad at x_t
-    direction: Callable[..., Any]
-    client_finalize: Callable[..., ClientOutputs]
-    server_update: Callable[..., Any]
+    def keys(self):
+        return list_algorithms()
 
-
-def server_init(params, momentum_dtype="float32") -> ServerState:
-    mdt = jnp.dtype(momentum_dtype)
-    z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, mdt), params)
-    return ServerState(momentum=z, second_moment=tree_zeros_like(params), round=jnp.int32(0))
+    def items(self):
+        return [(n, get_algorithm(n)) for n in list_algorithms()]
 
 
-def client_state_init(params, cfg: FedConfig):
-    """Stacked (N, …) per-client control variates for stateful baselines."""
-    if cfg.algo not in ("scaffold", "feddyn"):
-        return None
-    return jax.tree_util.tree_map(
-        lambda p: jnp.zeros((cfg.num_clients, *p.shape), p.dtype), params
-    )
+ALGORITHMS = _AlgorithmsView()
 
 
 # ----------------------------------------------------------------------
-# per-algorithm pieces
+# shared coefficient / post-step pieces
 # ----------------------------------------------------------------------
-# All ``direction`` functions share the signature
-#   direction(cfg, bcast_momentum, client_state, x, x0, g) -> v
-# where x is the current local iterate, x0 = x_t the round anchor, g the
-# (weight-decayed) minibatch gradient.
-
-
-def _dir_fedavg(cfg, m, cst, x, x0, g):
-    return g
-
-
-def _dir_fedcm(cfg, m, cst, x, x0, g):
-    # Algorithm 2, line 8: v = α·g + (1−α)·Δ_t
-    return jax.tree_util.tree_map(
-        lambda gi, mi: cfg.alpha * gi + (1.0 - cfg.alpha) * mi, g, m
-    )
-
-
-def _dir_mimelite(cfg, m, cst, x, x0, g):
-    # MimeLite w/ momentum-SGD statistics: d = (1−β)·g + β·m, β = 1−α.
-    # Identical functional form to FedCM — the difference is how m is
-    # *updated* (full-batch grads at x_t; see server_update + engine).
-    return jax.tree_util.tree_map(
-        lambda gi, mi: cfg.alpha * gi + (1.0 - cfg.alpha) * mi, g, m
-    )
-
-
-def _dir_scaffold(cfg, m, cst, x, x0, g):
-    # SCAFFOLD option: v = g − c_i + c;  cst = (c_i, c broadcast via m slot is
-    # NOT used — c rides in bcast).  Here cst is a tuple (c_i, c).
-    c_i, c = cst
-    return jax.tree_util.tree_map(lambda gi, ci, cg: gi - ci + cg, g, c_i, c)
-
-
-def _dir_feddyn(cfg, m, cst, x, x0, g):
-    # FedDyn local objective: f_i(x) − ⟨λ_i, x⟩ + (α_dyn/2)‖x − x_t‖²
-    lam_i = cst
-    a = cfg.feddyn_alpha
-    return jax.tree_util.tree_map(
-        lambda gi, li, xi, x0i: gi - li + a * (xi - x0i), g, lam_i, x, x0
-    )
-
-
-# --- client_finalize(cfg, x0, xK, client_state, eta_l, full_grad) -> ClientOutputs
-
-
-def _fin_plain(cfg, x0, xK, cst, eta_l, full_grad):
-    delta = tree_sub(xK, x0)
-    return ClientOutputs(delta, tree_zeros_like(x0), tree_zeros_like(x0))
-
-
-def _fin_mimelite(cfg, x0, xK, cst, eta_l, full_grad):
-    delta = tree_sub(xK, x0)
-    return ClientOutputs(delta, tree_zeros_like(x0), full_grad)
-
-
-def _fin_scaffold(cfg, x0, xK, cst, eta_l, full_grad):
-    c_i, c = cst
-    delta = tree_sub(xK, x0)
-    K = cfg.local_steps
-    # option II: c_i⁺ = c_i − c + (x_t − x_{i,K}) / (K·η_l)
-    c_new = jax.tree_util.tree_map(
-        lambda ci, cg, d: ci - cg - d / (K * eta_l), c_i, c, delta
-    )
-    return ClientOutputs(delta, tree_sub(c_new, c_i), tree_zeros_like(x0))
-
-
-def _fin_feddyn(cfg, x0, xK, cst, eta_l, full_grad):
-    delta = tree_sub(xK, x0)
-    # λ_i ← λ_i − α_dyn·(θ_i − x_t)
-    state_delta = tree_scale(delta, -cfg.feddyn_alpha)
-    return ClientOutputs(delta, state_delta, tree_zeros_like(x0))
-
-
-# --- server_update(cfg, params, st, mean_delta, mean_state_delta, mean_extra,
-#                   n_active, eta_l) -> (params, ServerState)
 
 
 def _eta_g_eff(cfg: FedConfig, eta_l) -> jax.Array:
@@ -177,73 +94,241 @@ def _eta_g_eff(cfg: FedConfig, eta_l) -> jax.Array:
     return cfg.eta_g * eta_l * cfg.local_steps
 
 
+def _c_pseudo_grad(cfg, eta_l, n_active):
+    """Fold coefficient turning mean(Δ_i) into Δ_{t+1} (Algorithm 1/2
+    line 13): ``m ← −mean/(η_l·K)``."""
+    return -1.0 / (eta_l * cfg.local_steps)
+
+
+def _c_alpha_pseudo_grad(cfg, eta_l, n_active):
+    """EMA coupling of the adaptive methods: ``m ← (1−α)·m + α·Δ_{t+1}``."""
+    return -cfg.alpha / (eta_l * cfg.local_steps)
+
+
+def _c_eta_g(cfg, eta_l, n_active):
+    return cfg.eta_g
+
+
+def _c_participation_frac(cfg, eta_l, n_active):
+    """SCAFFOLD server control variate: ``c ← c + (|S|/N)·mean(Δc_i)``."""
+    return n_active / cfg.num_clients
+
+
+def _c_feddyn_h(cfg, eta_l, n_active):
+    """FedDyn: ``h ← h − α_dyn·(|S|/N)·mean(Δ_i)``."""
+    return -cfg.feddyn_alpha * (n_active / cfg.num_clients)
+
+
 def _pseudo_grad(mean_delta, eta_l, K):
     """Δ_{t+1} = −(1/(η_l·K))·mean_i(Δ_i) — Algorithm 1/2 line 13."""
     return tree_scale(mean_delta, -1.0 / (eta_l * K))
 
 
-def _srv_fedavg(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
-    new_params = tree_axpy(-_eta_g_eff(cfg, eta_l), pg, params)
-    return new_params, st._replace(momentum=pg, round=st.round + 1)
+# --- per-client state updates (round close; see registry.state_update_fn)
 
 
-def _srv_fedcm(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    # Algorithm 2 lines 13–14: Δ_{t+1} IS the new momentum (Lemma 4.1 shows it
-    # equals α·Δ̃_t + (1−α)·Δ_t because clients descend along v, not g).
-    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
-    new_params = tree_axpy(-_eta_g_eff(cfg, eta_l), pg, params)
-    mdt = jnp.dtype(getattr(cfg, "momentum_dtype", "float32"))
-    m_store = jax.tree_util.tree_map(lambda x: x.astype(mdt), pg)
-    return new_params, st._replace(momentum=m_store, round=st.round + 1)
-
-
-def _srv_fedadam(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    # Reddi+20 server Adam on the pseudo-gradient; β1 = 1−α, τ = adam_tau.
-    pg = _pseudo_grad(mean_delta, eta_l, cfg.local_steps)
-    m = jax.tree_util.tree_map(
-        lambda mi, gi: (1.0 - cfg.alpha) * mi + cfg.alpha * gi, st.momentum, pg
+def _scaffold_state_update(cfg, x0, xK, c_i, c, delta, eta_l):
+    # option II: c_i⁺ = c_i − c + (x_t − x_{i,K}) / (K·η_l)
+    K = cfg.local_steps
+    c_new = jax.tree_util.tree_map(
+        lambda ci, cg, d: ci - cg - d / (K * eta_l), c_i, c, delta
     )
+    return tree_sub(c_new, c_i)
+
+
+def _feddyn_state_update(cfg, x0, xK, lam_i, m, delta, eta_l):
+    # λ_i ← λ_i − α_dyn·(θ_i − x_t)
+    return tree_scale(delta, -cfg.feddyn_alpha)
+
+
+# --- pure server post-steps (the part a streaming fold pass can't express)
+
+
+def _feddyn_post(cfg, x, srv, dmean, n_active, eta_l):
+    # fold already did  h ← h − α_dyn·(|S|/N)·mean  and  x ← x + mean
+    # (the mean of client models); the dual shift is x ← x − h/α_dyn.
+    return tree_axpy(-1.0 / cfg.feddyn_alpha, srv.momentum, x), srv
+
+
+def _fedadam_post(cfg, x, srv, dmean, n_active, eta_l):
+    # Reddi+20 server Adam: fold already did m ← (1−α)m + α·Δ_{t+1};
+    # here the second moment EMA + preconditioned absolute-lr step.
+    pg = _pseudo_grad(dmean, eta_l, cfg.local_steps)
     v = jax.tree_util.tree_map(
         lambda vi, gi: cfg.adam_beta2 * vi + (1.0 - cfg.adam_beta2) * jnp.square(gi),
-        st.second_moment,
-        pg,
+        srv.second_moment, pg,
     )
-    new_params = jax.tree_util.tree_map(
+    x = jax.tree_util.tree_map(
         lambda p, mi, vi: p - cfg.eta_g * mi / (jnp.sqrt(vi) + cfg.adam_tau),
-        params,
-        m,
-        v,
+        x, srv.momentum, v,
     )
-    return new_params, ServerState(momentum=m, second_moment=v, round=st.round + 1)
+    return x, srv._replace(second_moment=v)
 
 
-def _srv_scaffold(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    new_params = tree_axpy(cfg.eta_g, mean_delta, params)  # x + η_g·mean(Δ_i)
-    # c ← c + (|S|/N)·mean(Δc_i); the server's c rides in st.momentum.
-    frac = n_active.astype(jnp.float32) / cfg.num_clients
-    c = tree_axpy(frac, mean_sd, st.momentum)
-    return new_params, st._replace(momentum=c, round=st.round + 1)
-
-
-def _srv_feddyn(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    # h ← h − α_dyn·(|S|/N)·mean(Δ_i);  x ← (mean of client models) − h/α_dyn
-    a = cfg.feddyn_alpha
-    frac = n_active.astype(jnp.float32) / cfg.num_clients
-    h = tree_axpy(-a * frac, mean_delta, st.momentum)
-    mean_model = tree_add(params, mean_delta)
-    new_params = tree_axpy(-1.0 / a, h, mean_model)
-    return new_params, st._replace(momentum=h, round=st.round + 1)
-
-
-def _srv_mimelite(cfg, params, st, mean_delta, mean_sd, mean_extra, n_active, eta_l):
-    # x ← x + η_g·mean(Δ_i);  m ← (1−α)·m + α·mean_i ∇f_i(x_t) (FULL batch —
-    # Appendix A: this is the FedCM-vs-MimeLite distinction).
-    new_params = tree_axpy(cfg.eta_g, mean_delta, params)
-    m = jax.tree_util.tree_map(
-        lambda mi, gi: (1.0 - cfg.alpha) * mi + cfg.alpha * gi, st.momentum, mean_extra
+def _fedadagrad_post(cfg, x, srv, dmean, n_active, eta_l):
+    # Reddi+20 FedAdagrad: v accumulates (no decay) — v ← v + Δ²_{t+1}.
+    pg = _pseudo_grad(dmean, eta_l, cfg.local_steps)
+    v = jax.tree_util.tree_map(
+        lambda vi, gi: vi + jnp.square(gi), srv.second_moment, pg
     )
-    return new_params, st._replace(momentum=m, round=st.round + 1)
+    x = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - cfg.eta_g * mi / (jnp.sqrt(vi) + cfg.adam_tau),
+        x, srv.momentum, v,
+    )
+    return x, srv._replace(second_moment=v)
+
+
+def _fedyogi_post(cfg, x, srv, dmean, n_active, eta_l):
+    # Reddi+20 FedYogi: sign-controlled second moment —
+    # v ← v − (1−β2)·sign(v − Δ²)·Δ².
+    pg = _pseudo_grad(dmean, eta_l, cfg.local_steps)
+    v = jax.tree_util.tree_map(
+        lambda vi, gi: vi - (1.0 - cfg.adam_beta2)
+        * jnp.sign(vi - jnp.square(gi)) * jnp.square(gi),
+        srv.second_moment, pg,
+    )
+    x = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - cfg.eta_g * mi / (jnp.sqrt(vi) + cfg.adam_tau),
+        x, srv.momentum, v,
+    )
+    return x, srv._replace(second_moment=v)
+
+
+def _fedavgm_post(cfg, x, srv, dmean, n_active, eta_l):
+    # heavy-ball server step along the post-fold momentum:
+    # x ← x − η_g·η_l·K·m'  (α=1 degenerates to FedAvg exactly).
+    return tree_axpy(-_eta_g_eff(cfg, eta_l), srv.momentum, x), srv
+
+
+def _fedacg_post(cfg, x, srv, dmean, n_active, eta_l):
+    # Nesterov/FedACG-style lookahead: step along pg + λ·m' (the momentum
+    # the NEXT round will broadcast), not the stale m.
+    lam = cfg.acg_lambda
+    pg = _pseudo_grad(dmean, eta_l, cfg.local_steps)
+    step = jax.tree_util.tree_map(lambda mi, gi: gi + lam * mi, srv.momentum, pg)
+    return tree_axpy(-_eta_g_eff(cfg, eta_l), step, x), srv
+
+
+# ----------------------------------------------------------------------
+# the builtin specs — pure data (see repro.core.registry)
+# ----------------------------------------------------------------------
+
+register_algorithm(AlgorithmSpec(
+    name="fedavg",
+    direction_row=DirectionRow(),  # v = g
+    # m' := Δ_{t+1} (kept for metrics/inspection);  x' = x + η_g·mean
+    fold=(FoldPass("delta", c_mm=0.0, c_md=_c_pseudo_grad, c_xd=_c_eta_g),),
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedcm",
+    # Algorithm 2, line 8: v = α·g + (1−α)·Δ_t
+    direction_row=DirectionRow(
+        c_g=lambda cfg: cfg.alpha,
+        aux=(("momentum", lambda cfg: 1.0 - cfg.alpha),),
+    ),
+    # lines 13–14: Δ_{t+1} IS the new momentum (Lemma 4.1: it equals
+    # α·Δ̃_t + (1−α)·Δ_t because clients descend along v, not g).
+    fold=(FoldPass("delta", c_mm=0.0, c_md=_c_pseudo_grad, c_xd=_c_eta_g),),
+    needs_momentum_broadcast=True,
+    momentum_store="momentum_dtype",
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedadam",
+    direction_row=DirectionRow(),  # clients run plain SGD
+    # m ← (1−α)·m + α·Δ_{t+1}; the v EMA + preconditioned step is the post
+    fold=(FoldPass("delta", c_mm=lambda cfg, e, n: 1.0 - cfg.alpha,
+                   c_md=_c_alpha_pseudo_grad, c_xd=0.0),),
+    server_post_fn=_fedadam_post,
+    needs_second_moment=True,
+))
+
+register_algorithm(AlgorithmSpec(
+    name="scaffold",
+    # option: v = g − c_i + c  (the server's c rides the momentum broadcast)
+    direction_row=DirectionRow(
+        aux=(("client_state", -1.0), ("momentum", 1.0)),
+    ),
+    state_update_fn=_scaffold_state_update,
+    # params pass over Δ, then the c-EMA pass over Δc
+    fold=(FoldPass("delta", c_mm=1.0, c_md=0.0, c_xd=_c_eta_g),
+          FoldPass("state_delta", c_mm=1.0, c_md=_c_participation_frac, c_xd=0.0)),
+    needs_client_state=True,
+    needs_momentum_broadcast=True,
+    client_state_uplink=True,  # Δc_i goes up; c comes down with the broadcast
+))
+
+register_algorithm(AlgorithmSpec(
+    name="feddyn",
+    # local objective f_i(x) − ⟨λ_i, x⟩ + (α_dyn/2)‖x − x_t‖²
+    direction_row=DirectionRow(
+        c_x=lambda cfg: cfg.feddyn_alpha,
+        aux=(("client_state", -1.0),),
+    ),
+    state_update_fn=_feddyn_state_update,
+    # h ← h − α_dyn·(|S|/N)·mean;  x ← (x + mean) − h/α_dyn (post)
+    fold=(FoldPass("delta", c_mm=1.0, c_md=_c_feddyn_h, c_xd=1.0),),
+    server_post_fn=_feddyn_post,
+    needs_client_state=True,
+    # λ_i never leaves the client — no uplink charge for the state plane
+))
+
+register_algorithm(AlgorithmSpec(
+    name="mimelite",
+    # MimeLite w/ momentum-SGD statistics: d = (1−β)·g + β·m, β = 1−α —
+    # identical functional form to FedCM; the difference is how m is
+    # UPDATED (full-batch grads at x_t: the ``extra`` fold pass below).
+    direction_row=DirectionRow(
+        c_g=lambda cfg: cfg.alpha,
+        aux=(("momentum", lambda cfg: 1.0 - cfg.alpha),),
+    ),
+    fold=(FoldPass("delta", c_mm=1.0, c_md=0.0, c_xd=_c_eta_g),
+          FoldPass("extra", c_mm=lambda cfg, e, n: 1.0 - cfg.alpha,
+                   c_md=lambda cfg, e, n: cfg.alpha, c_xd=0.0)),
+    needs_momentum_broadcast=True,
+    needs_full_grad=True,
+))
+
+# --- the family beyond the paper: pure spec definitions -----------------
+
+register_algorithm(AlgorithmSpec(
+    name="fedavgm",
+    direction_row=DirectionRow(),  # clients run plain SGD
+    # Hsu+19 server heavy-ball on the pseudo-gradient, β = 1−α:
+    # m' = (1−α)·m + Δ_{t+1};  x ← x − η_g·η_l·K·m'  (α=1 ⇒ FedAvg)
+    fold=(FoldPass("delta", c_mm=lambda cfg, e, n: 1.0 - cfg.alpha,
+                   c_md=_c_pseudo_grad, c_xd=0.0),),
+    server_post_fn=_fedavgm_post,
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedadagrad",
+    direction_row=DirectionRow(),
+    fold=(FoldPass("delta", c_mm=lambda cfg, e, n: 1.0 - cfg.alpha,
+                   c_md=_c_alpha_pseudo_grad, c_xd=0.0),),
+    server_post_fn=_fedadagrad_post,
+    needs_second_moment=True,
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedyogi",
+    direction_row=DirectionRow(),
+    fold=(FoldPass("delta", c_mm=lambda cfg, e, n: 1.0 - cfg.alpha,
+                   c_md=_c_alpha_pseudo_grad, c_xd=0.0),),
+    server_post_fn=_fedyogi_post,
+    needs_second_moment=True,
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedacg",
+    direction_row=DirectionRow(),
+    # Kim+22-style accelerated server momentum:
+    # m' = λ·m + Δ_{t+1};  x ← x − η_g·η_l·K·(Δ_{t+1} + λ·m')  (lookahead)
+    fold=(FoldPass("delta", c_mm=lambda cfg, e, n: cfg.acg_lambda,
+                   c_md=_c_pseudo_grad, c_xd=0.0),),
+    server_post_fn=_fedacg_post,
+))
 
 
 # ----------------------------------------------------------------------
@@ -263,54 +348,17 @@ class FlatClientOutputs(NamedTuple):
 
 
 def sparse_client_finalize(
-    algo: Algorithm, cfg: FedConfig, x0, xK, cst, eta_l, full_grad
+    algo: AlgorithmSpec, cfg: FedConfig, x0, xK, cst, m, eta_l, full_grad
 ) -> FlatClientOutputs:
     """``algo.client_finalize`` minus the zeros trees it materializes:
     unused planes come back ``None``.  Array-polymorphic — the flat
     engine's kernel path feeds it bare ``(P,)`` buffers (single-leaf
-    pytrees), the jnp path feeds it leaf trees.  Op order deliberately
-    mirrors the tree finalizers exactly (e.g. SCAFFOLD computes ``c_new``
-    then subtracts ``c_i`` instead of the algebraically-equal
-    ``−c − Δ/(K·η_l)``) so flat and tree trajectories agree bitwise, not
-    just to tolerance."""
+    pytrees), the jnp path feeds leaf trees.  Op order deliberately
+    mirrors the tree finalizer exactly (same ``state_update_fn``), so flat
+    and tree trajectories agree bitwise, not just to tolerance."""
     delta = tree_sub(xK, x0)
     state_delta = None
-    if algo.name == "scaffold":
-        c_i, c = cst
-        K = cfg.local_steps
-        c_new = jax.tree_util.tree_map(
-            lambda ci, cg, d: ci - cg - d / (K * eta_l), c_i, c, delta
-        )
-        state_delta = tree_sub(c_new, c_i)
-    elif algo.name == "feddyn":
-        state_delta = tree_scale(delta, -cfg.feddyn_alpha)
+    if algo.needs_client_state and algo.state_update_fn is not None:
+        state_delta = algo.state_update_fn(cfg, x0, xK, cst, m, delta, eta_l)
     extra = full_grad if algo.needs_full_grad else None
     return FlatClientOutputs(delta, state_delta, extra)
-
-
-ALGORITHMS: Dict[str, Algorithm] = {
-    "fedavg": Algorithm(
-        "fedavg", False, False, False, _dir_fedavg, _fin_plain, _srv_fedavg
-    ),
-    "fedcm": Algorithm(
-        "fedcm", False, True, False, _dir_fedcm, _fin_plain, _srv_fedcm
-    ),
-    "fedadam": Algorithm(
-        "fedadam", False, False, False, _dir_fedavg, _fin_plain, _srv_fedadam
-    ),
-    "scaffold": Algorithm(
-        "scaffold", True, True, False, _dir_scaffold, _fin_scaffold, _srv_scaffold
-    ),
-    "feddyn": Algorithm(
-        "feddyn", True, False, False, _dir_feddyn, _fin_feddyn, _srv_feddyn
-    ),
-    "mimelite": Algorithm(
-        "mimelite", False, True, True, _dir_mimelite, _fin_mimelite, _srv_mimelite
-    ),
-}
-
-
-def get_algorithm(name: str) -> Algorithm:
-    if name not in ALGORITHMS:
-        raise KeyError(f"unknown federated algorithm {name!r}; known: {sorted(ALGORITHMS)}")
-    return ALGORITHMS[name]

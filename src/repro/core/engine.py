@@ -62,10 +62,20 @@ of the PR-1 kernel route disappears entirely.  The tree path
 (``use_flat_plane=False``) is retained verbatim as the numerical oracle
 (tests/test_flat.py) and for tensor-sharded lowering (launch/fed_dryrun).
 
+The algorithm layer is the declarative registry (``repro.core.registry``):
+the engine consumes ONE ``AlgorithmSpec`` per run — its direction
+coefficient row drives the local steps, its fold coefficient rows (+
+optional pure post-step) drive the round close, and its state-plane flags
+drive ``FedState`` allocation and payload accounting.  The engine contains
+zero per-algorithm branches; registering a new spec makes it runnable on
+every path below.
+
 ``cfg.use_fused_kernel`` routes the update phase through Pallas — flat
-plane only: the per-local-step direction via ``kernels/fed_direction`` (all
-algorithms) and the round-close masked-mean + momentum EMA + param step via
-``kernels/server_update`` (fedavg/fedcm/scaffold/mimelite).  The legacy
+plane only: the per-local-step direction via ``kernels/fed_direction``
+(the spec's ``DirectionRow`` becomes the SMEM coefficient vector) and the
+round-close masked-mean + momentum EMA + param step via
+``kernels/server_update`` (one launch per ``FoldPass``; specs with a
+``server_fn`` escape hatch fall back to the jnp reduction).  The legacy
 whole-tree ``fedcm_update`` launch is retired from the tree path (its
 ``ref.py`` stays as a blend oracle); on the tree path the flag is inert.
 Each kernel's ``ref.py`` is its oracle.
@@ -106,7 +116,7 @@ from repro.core.algorithms import (
 from repro.core.flat import CohortUplink, FlatSpec, ring_push
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
 from repro.kernels.fed_direction.ops import flat_direction_step
-from repro.kernels.server_update.ops import fused_server_step
+from repro.kernels.server_update.ops import fused_fold
 from repro.utils.trees import (
     ravel_leaves,
     tree_axpy,
@@ -131,7 +141,7 @@ class FlatMaster(NamedTuple):
     tree path."""
 
     params: jax.Array  # (P,) f32
-    second_moment: jax.Array  # (P,) f32
+    second_moment: Optional[jax.Array]  # (P,) f32, or None (spec doesn't need v)
     client_states: Optional[jax.Array]  # (N, P) f32 (kernel path) or None
 
 
@@ -149,10 +159,6 @@ class FedState(NamedTuple):
     client_states: Any  # stacked (N, …) or None
     rng: jax.Array
     master: Optional[FlatMaster] = None  # flat-engine f32 master planes
-
-
-# algorithms whose round-close the fused server kernel covers
-_FUSED_SERVER_ALGOS = ("fedavg", "fedcm", "scaffold", "mimelite")
 
 
 class RoundMetrics(NamedTuple):
@@ -229,15 +235,19 @@ def client_update(
     full_grad_batch=None,  # MimeLite: the client's whole dataset
     unroll: bool = False,  # dry-run analysis: count every local step
 ) -> Tuple[ClientOutputs, jax.Array]:
-    """One client's K local steps.  Returns (outputs, mean local loss)."""
+    """One client's K local steps.  Returns (outputs, mean local loss).
+
+    The spec's declarative direction row consumes the broadcast buffer and
+    the client's state slice as NAMED streams — no per-algorithm packing
+    (the old scaffold ``(c_i, c)`` tuple) happens here.
+    """
     x0 = params
-    cst = (client_state, bcast_momentum) if algo.name == "scaffold" else client_state
 
     def step(x, batch):
         loss, g = jax.value_and_grad(loss_fn)(x, batch)
         if cfg.weight_decay:
             g = tree_axpy(cfg.weight_decay, x, g)
-        v = algo.direction(cfg, bcast_momentum, cst, x, x0, g)
+        v = algo.direction(cfg, bcast_momentum, client_state, x, x0, g)
         # keep the carry dtype stable (bf16 params + f32 momentum promote)
         x = jax.tree_util.tree_map(
             lambda xi, vi: (xi - eta_l * vi).astype(xi.dtype), x, v
@@ -252,7 +262,8 @@ def client_update(
         assert full_grad_batch is not None
         full_grad = jax.grad(loss_fn)(x0, full_grad_batch)
 
-    outs = algo.client_finalize(cfg, x0, xK, cst, eta_l, full_grad)
+    outs = algo.client_finalize(cfg, x0, xK, client_state, bcast_momentum,
+                                eta_l, full_grad)
     return outs, jnp.mean(losses)
 
 
@@ -295,13 +306,11 @@ def flat_client_update(
         def flat_loss(flat, batch):
             return loss_fn(spec.unravel(flat), batch)
 
-        cst = (cst_flat_i, m_t) if algo.name == "scaffold" else cst_flat_i
-
         def step(x, batch):
             loss, g = jax.value_and_grad(flat_loss)(x, batch)
             if cfg.weight_decay:
                 g = cfg.weight_decay * x + g
-            x = flat_direction_step(algo.name, cfg, x, g, m_t, cst, x_t, eta_l)
+            x = flat_direction_step(algo, cfg, x, g, m_t, cst_flat_i, x_t, eta_l)
             return x, loss
 
         xK_flat, losses = jax.lax.scan(step, x_t, batches,
@@ -310,16 +319,15 @@ def flat_client_update(
         if algo.needs_full_grad:
             assert full_grad_batch is not None
             full_grad = jax.grad(flat_loss)(x_t, full_grad_batch)
-        outs = sparse_client_finalize(algo, cfg, x_t, xK_flat, cst, eta_l, full_grad)
+        outs = sparse_client_finalize(algo, cfg, x_t, xK_flat, cst_flat_i,
+                                      m_t, eta_l, full_grad)
         return outs, jnp.mean(losses)
-
-    cst = (cst_tree_i, m_tree) if algo.name == "scaffold" else cst_tree_i
 
     def step(x, batch):
         loss, g = jax.value_and_grad(loss_fn)(x, batch)
         if cfg.weight_decay:
             g = tree_axpy(cfg.weight_decay, x, g)
-        v = algo.direction(cfg, m_tree, cst, x, x0_tree, g)
+        v = algo.direction(cfg, m_tree, cst_tree_i, x, x0_tree, g)
         # keep the carry dtype stable (bf16 params + f32 momentum promote)
         x = jax.tree_util.tree_map(
             lambda xi, vi: (xi - eta_l * vi).astype(xi.dtype), x, v
@@ -332,7 +340,8 @@ def flat_client_update(
     if algo.needs_full_grad:
         assert full_grad_batch is not None
         full_grad = jax.grad(loss_fn)(x0_tree, full_grad_batch)
-    outs = sparse_client_finalize(algo, cfg, x0_tree, xK, cst, eta_l, full_grad)
+    outs = sparse_client_finalize(algo, cfg, x0_tree, xK, cst_tree_i,
+                                  m_tree, eta_l, full_grad)
     return outs, jnp.mean(losses)
 
 
@@ -403,9 +412,14 @@ class FederatedEngine:
 
     # -------------------------------------------------- init
     def init(self, params, rng) -> FedState:
+        """Allocate the FedState the registered spec requires: the stacked
+        per-client planes iff ``needs_client_state``, the second-moment
+        plane iff ``needs_second_moment`` — allocation is derived from the
+        spec's state-plane flags, never from algorithm names."""
         state = FedState(
             params=params,
-            server=server_init(params, self.cfg.momentum_dtype),
+            server=server_init(params, self.cfg.momentum_dtype,
+                               needs_second_moment=self.algo.needs_second_moment),
             client_states=client_state_init(params, self.cfg),
             rng=rng,
         )
@@ -422,9 +436,10 @@ class FederatedEngine:
                 cst = None
                 if state.client_states is not None and self.cfg.use_fused_kernel:
                     cst = spec.ravel(state.client_states, batch_dims=1)
+                sm = state.server.second_moment
                 state = state._replace(master=FlatMaster(
                     params=spec.ravel(params),
-                    second_moment=spec.ravel(state.server.second_moment),
+                    second_moment=spec.ravel(sm) if sm is not None else None,
                     client_states=cst,
                 ))
         return state
@@ -441,13 +456,14 @@ class FederatedEngine:
 
     def _payload_from_nbytes(self, P: int) -> Dict[str, int]:
         """Payload accounting from a total byte count — the flat path charges
-        ``FlatSpec.nbytes`` (the wire dtypes), identical to ``tree_bytes``."""
+        ``FlatSpec.nbytes`` (the wire dtypes), identical to ``tree_bytes``.
+        Wire shapes are DERIVED from the spec's state-plane flags (§4.2)."""
         down = P  # x_t always goes down
         up = P  # Δ_i always goes up
         if self.algo.needs_momentum_broadcast:
             down += P  # Δ_t (fedcm/mimelite) or c (scaffold)
-        if self.algo.name == "scaffold":
-            up += P  # Δc_i — feddyn's λ_i, by contrast, never leaves the client
+        if self.algo.client_state_uplink:
+            up += P  # SCAFFOLD Δc_i — feddyn's λ_i never leaves the client
         if self.algo.needs_full_grad:
             up += P  # MimeLite full-batch gradient
         return {"down_per_client": down, "up_per_client": up}
@@ -483,12 +499,13 @@ class FederatedEngine:
         ``run_round`` calls bitwise-continue the f32 trajectory instead of
         re-rounding at every boundary."""
         cfg, mst = self.cfg, state.master
+        sm = state.server.second_moment
         fsrv = ServerState(
             # momentum plane and tree share momentum_dtype — ravel is exact,
             # no master needed
             momentum=spec.ravel(state.server.momentum, dtype=cfg.momentum_dtype),
             second_moment=(mst.second_moment if mst is not None
-                           else spec.ravel(state.server.second_moment)),
+                           else (spec.ravel(sm) if sm is not None else None)),
             round=state.server.round,
         )
         fcst = state.client_states
@@ -503,9 +520,10 @@ class FederatedEngine:
         """Flat-plane state → tree state (leaf shapes AND dtypes restored).
         For sub-f32 trees the un-rounded planes ride along as ``master``."""
         cfg = self.cfg
+        fsm = fstate.server.second_moment
         srv = ServerState(
             momentum=spec.unravel(fstate.server.momentum, dtype=cfg.momentum_dtype),
-            second_moment=spec.unravel(fstate.server.second_moment),
+            second_moment=spec.unravel(fsm) if fsm is not None else None,
             round=fstate.server.round,
         )
         cst = fstate.client_states
@@ -608,14 +626,14 @@ class FederatedEngine:
         # never reduced, where the tree path pays for both)
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
-        use_kernel = cfg.use_fused_kernel
+        use_kernel = cfg.use_fused_kernel and algo.server_fn is None
 
         fsrv = fstate.server
-        if use_kernel and algo.name in _FUSED_SERVER_ALGOS:
-            new_params, new_momentum, mean_delta = self._fused_server_update(
-                algo, outs, w, n_active, x_t, m_t, eta_l
+        if use_kernel:
+            new_params, new_server, mean_delta = self._fused_round_close(
+                algo, fsrv, outs, w, n_active, x_t, eta_l
             )
-            new_server = ServerState(new_momentum, fsrv.second_moment, fsrv.round + 1)
+            new_server = new_server._replace(round=fsrv.round + 1)
         else:
             mean_delta = self._masked_pmean(outs.delta, w, n_active)
             new_params, new_server = algo.server_update(
@@ -629,7 +647,7 @@ class FederatedEngine:
         # the tree oracle (jnp path)
         new_cst = fstate.client_states
         if algo.needs_client_state:
-            if use_kernel:
+            if cfg.use_fused_kernel:  # (N, P) plane representation
                 upd = cohort_cst + outs.state_delta * w[:, None]
                 new_cst = fstate.client_states.at[ids].set(upd)
             else:
@@ -653,55 +671,34 @@ class FederatedEngine:
         )
         return FedState(new_params, new_server, new_cst, fstate.rng), metrics
 
-    def _fused_server_update(self, algo, outs, w, n_active, x_t, m_t, eta_l,
-                             discount=1.0):
-        """Round-close via the fused server kernel: masked mean + momentum
-        EMA + param step in one pass over the (C, P) plane (two passes for
-        the algorithms that EMA a second plane).
+    def _fused_round_close(self, algo, fsrv, outs, w, n_active, x_t, eta_l,
+                           discount=1.0):
+        """Round-close via the fused server kernel: the spec's fold rows
+        execute as ``server_update`` passes over the ``(C, P)`` uplink
+        planes (``kernels/server_update/ops.fused_fold``), then the spec's
+        optional pure post-step runs on the resulting flat planes —
+        array-polymorphic, so FedAdam's preconditioner is the same code on
+        both paths.
 
         ``discount`` is the staleness weight γ the async engine applies to
         folded in-flight cohorts — it rides the kernel's SMEM coefficient
-        row (1.0 for the sync path: a f32 multiply by 1.0 is exact)."""
+        row (1.0 for the sync path: a f32 multiply by 1.0 is exact).  The
+        returned ServerState keeps the caller's round counter (sync bumps
+        it, the async fold is launch-aligned)."""
         cfg = self.cfg
-        wn = w / n_active
-        # honor cfg.aggregate_dtype exactly like the jnp paths: the uplink
-        # planes are quantized BEFORE the reduction (the kernel body then
-        # accumulates in f32).  Only the reduction inputs are cast — the
-        # client-state scatter keeps the unquantized plane, as the tree
-        # oracle does.
-        agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
-
-        def q(plane):
-            return plane if agg_dt == jnp.float32 else plane.astype(agg_dt)
-        if algo.name in ("fedavg", "fedcm"):
-            # m' := Δ_{t+1} = −mean/(η_l·K);  x' = x + η_g·mean
-            s = -1.0 / (eta_l * cfg.local_steps)
-            m_dt = jnp.dtype(cfg.momentum_dtype) if algo.name == "fedcm" else jnp.float32
-            return fused_server_step(
-                q(outs.delta), wn, x_t, m_t, 0.0, s, cfg.eta_g,
-                m_dtype=m_dt, discount=discount,
-            )
-        if algo.name == "scaffold":
-            new_x, _, mean_delta = fused_server_step(
-                q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g,
-                discount=discount,
-            )
-            frac = n_active / cfg.num_clients
-            _, new_c, _ = fused_server_step(
-                q(outs.state_delta), wn, x_t, m_t, 1.0, frac, 0.0,
-                m_dtype=jnp.float32, discount=discount,
-            )
-            return new_x, new_c, mean_delta
-        # mimelite: x from the delta plane, m EMA from the full-batch grads
-        new_x, _, mean_delta = fused_server_step(
-            q(outs.delta), wn, x_t, m_t, 1.0, 0.0, cfg.eta_g,
-            discount=discount,
+        planes = {"delta": outs.delta, "state_delta": outs.state_delta,
+                  "extra": outs.extra}
+        new_x, new_m, mean_delta = fused_fold(
+            algo, cfg, planes, w / n_active, n_active, x_t, fsrv.momentum,
+            eta_l, discount=discount,
         )
-        _, new_m, _ = fused_server_step(
-            q(outs.extra), wn, x_t, m_t, 1.0 - cfg.alpha, cfg.alpha, 0.0,
-            m_dtype=jnp.float32, discount=discount,
-        )
-        return new_x, new_m, mean_delta
+        new_server = fsrv._replace(momentum=new_m)
+        if algo.server_post_fn is not None:
+            dmean = mean_delta if discount == 1.0 else discount * mean_delta
+            new_x, new_server = algo.server_post_fn(
+                cfg, new_x, new_server, dmean, n_active, eta_l
+            )
+        return new_x, new_server, mean_delta
 
     # -------------------------------------------------- round
     def _round_step_impl(self, state: FedState, batches, ids, mask, full_batches):
@@ -1161,21 +1158,19 @@ class FederatedEngine:
         w = entry.w
         n_active = jnp.sum(w)
         x_t = fstate.params
-        m_t = fstate.server.momentum
         fsrv = fstate.server
-        use_kernel = cfg.use_fused_kernel and algo.name in _FUSED_SERVER_ALGOS
+        use_kernel = cfg.use_fused_kernel and algo.server_fn is None
 
         if use_kernel:
-            new_params, new_momentum, mean_delta = self._fused_server_update(
-                algo, entry, w, n_active, x_t, m_t, entry.eta_l,
+            new_params, new_server, mean_delta = self._fused_round_close(
+                algo, fsrv, entry, w, n_active, x_t, entry.eta_l,
                 discount=discount,
             )
-            new_server = ServerState(new_momentum, fsrv.second_moment, fsrv.round)
         else:
             if cfg.use_fused_kernel:
-                # kernel-path algorithm without a fused round-close
-                # (feddyn/fedadam): reduce the raw (C, P) planes exactly as
-                # the sync kernel path does
+                # kernel-path algorithm whose round-close is a ``server_fn``
+                # escape hatch: reduce the raw (C, P) planes exactly as the
+                # sync kernel path does
                 mean_delta = self._masked_pmean(entry.delta, w, n_active)
                 mean_sd = self._masked_pmean(entry.state_delta, w, n_active)
                 mean_extra = self._masked_pmean(entry.extra, w, n_active)
@@ -1195,15 +1190,11 @@ class FederatedEngine:
                         spec.unravel(entry.state_delta, dtype=jnp.float32),
                         w, n_active,
                     )
-            if discount != 1.0:  # static: the γ=1 sync fold stays bitwise
-                mean_delta_f = discount * mean_delta
-                mean_sd_f = None if mean_sd is None else discount * mean_sd
-                mean_extra_f = None if mean_extra is None else discount * mean_extra
-            else:
-                mean_delta_f, mean_sd_f, mean_extra_f = mean_delta, mean_sd, mean_extra
+            # the γ=1 sync fold stays bitwise: spec.server_update skips the
+            # statically-1.0 discount multiply
             new_params, new_server = algo.server_update(
-                cfg, x_t, fsrv, mean_delta_f, mean_sd_f, mean_extra_f,
-                n_active, entry.eta_l,
+                cfg, x_t, fsrv, mean_delta, mean_sd, mean_extra,
+                n_active, entry.eta_l, discount=discount,
             )
             new_server = new_server._replace(round=fsrv.round)
 

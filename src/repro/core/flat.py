@@ -1,6 +1,7 @@
 """The flat parameter plane: ravel a pytree ONCE, compute on one buffer.
 
-Every update FedCM (and each baseline) performs — the client blend
+Every update FedCM (and each registered algorithm — see
+``repro.core.registry``) performs — the client blend
 ``v = α·g + (1−α)·Δ_t``, SCAFFOLD's ``g − c_i + c``, the masked cohort
 mean, the server momentum/param step — is elementwise over the parameter
 vector.  The pytree structure only matters to the *loss function*; carrying

@@ -1,15 +1,20 @@
-"""jit'd dispatch from algorithm name to the generalized direction kernel.
+"""jit'd dispatch from an ``AlgorithmSpec`` to the generalized direction kernel.
 
 ``flat_direction_step`` is the flat engine's fused local step: given the
-flat plane buffers it builds the (η_l, c_g, c_x, c_aux...) coefficient
-vector for the algorithm and launches ONE kernel pass — no per-step
-concatenate/split, the buffers already ARE flat.
+flat plane buffers it resolves the spec's declarative ``DirectionRow``
+(``repro.core.registry``) into the (η_l, c_g, c_x, c_aux...) SMEM
+coefficient vector and launches ONE kernel pass — no per-step
+concatenate/split, the buffers already ARE flat, and no per-algorithm
+branching: the row's named streams (``"momentum"``, ``"client_state"``)
+map onto the kernel's auxiliary operands, and a nonzero proximal
+coefficient ``c_x`` on ``(x − x_t)`` is distributed onto the kernel's
+``c_x·x`` slot plus an ``−c_x·x_t`` auxiliary (a tolerance-level
+reassociation covered by the feddyn sweep test).
 
-Coverage: fedcm, mimelite (blend), scaffold (control variates), feddyn
-(proximal + dual), fedavg/fedadam (plain SGD step).  The affine forms are
-documented in kernel.py; feddyn's is distributed (``a·x − a·x_t`` instead
-of ``a·(x − x_t)``), a tolerance-level reassociation covered by its sweep
-test.
+Statically-zero coefficients drop their stream entirely — FedCM at α = 1
+launches the same zero-aux kernel as FedAvg.  Specs with an escape-hatch
+``direction_fn`` (non-affine directions) bypass the kernel: the callable
+is array-polymorphic and runs on the flat buffers directly.
 """
 from __future__ import annotations
 
@@ -29,27 +34,36 @@ def _coefs(eta_l, c_g, c_x, *c_aux):
     )
 
 
-def flat_direction_step(algo_name, cfg, x, g, m, cst, x0, eta_l):
+def flat_direction_step(algo, cfg, x, g, m, cst, x0, eta_l):
     """One fused local step x ← x − η_l·v on flat (P,) buffers.
 
-    ``m`` is the broadcast buffer (Δ_t for fedcm/mimelite, c for scaffold
-    rides inside ``cst``), ``cst`` the per-client state ((c_i, c) tuple for
-    scaffold, λ_i for feddyn, None otherwise), ``x0`` the round anchor x_t.
+    ``algo`` is an ``AlgorithmSpec`` or a registered name.  ``m`` is the
+    broadcast buffer (Δ_t for fedcm/mimelite, c for scaffold), ``cst`` the
+    per-client state plane (c_i / λ_i, or None), ``x0`` the round anchor
+    x_t — the spec's row picks the streams it consumes by name.
     """
-    if algo_name in ("fedcm", "mimelite"):
-        auxes = (m,)
-        coefs = _coefs(eta_l, cfg.alpha, 0.0, 1.0 - cfg.alpha)
-    elif algo_name == "scaffold":
-        c_i, c = cst
-        auxes = (c_i, c)
-        coefs = _coefs(eta_l, 1.0, 0.0, -1.0, 1.0)
-    elif algo_name == "feddyn":
-        auxes = (cst, x0)
-        a = cfg.feddyn_alpha
-        coefs = _coefs(eta_l, 1.0, a, -1.0, -a)
-    elif algo_name in ("fedavg", "fedadam"):
-        auxes = ()
-        coefs = _coefs(eta_l, 1.0, 0.0)
-    else:
-        raise KeyError(f"no fused direction form for algorithm {algo_name!r}")
-    return fed_direction_flat(x, g, auxes, coefs, interpret=INTERPRET)
+    # deferred import: repro.core.engine imports this module at package
+    # init, so a module-level registry import would be circular
+    from repro.core.registry import _dir_coef, get_algorithm
+
+    spec = get_algorithm(algo) if isinstance(algo, str) else algo
+    if spec.direction_row is None:
+        # escape hatch: non-affine direction, pure jnp on the flat buffers
+        v = spec.direction(cfg, m, cst, x, x0, g)
+        return (x - eta_l * v).astype(x.dtype)
+    row = spec.direction_row
+    c_g = _dir_coef(row.c_g, cfg)
+    c_x = _dir_coef(row.c_x, cfg)
+    streams = {"momentum": m, "client_state": cst}
+    auxes, aux_coefs = [], []
+    for stream, c in row.aux:
+        c = _dir_coef(c, cfg)
+        if c != 0.0:  # static zero: the stream never reaches the kernel
+            auxes.append(streams[stream])
+            aux_coefs.append(c)
+    if c_x != 0.0:
+        # distribute c_x·(x − x_t) onto the kernel's c_x·x slot + a −c_x·x_t aux
+        auxes.append(x0)
+        aux_coefs.append(-c_x)
+    coefs = _coefs(eta_l, c_g, c_x, *aux_coefs)
+    return fed_direction_flat(x, g, tuple(auxes), coefs, interpret=INTERPRET)

@@ -52,31 +52,56 @@ LANE = 128
 DEFAULT_BLOCK = 16 * 1024  # per-client elements per grid step
 
 
-def _kernel(coef_ref, wn_ref, d_ref, x_ref, m_ref, newx_ref, newm_ref, mean_ref):
-    c_mm = coef_ref[0, 0]
-    c_md = coef_ref[0, 1]
-    c_xd = coef_ref[0, 2]
-    gamma = coef_ref[0, 3]  # staleness discount on the folded mean
-    wn = wn_ref[...][:, 0].astype(jnp.float32)  # (C,) mask/|S| weights
-    d = d_ref[...].astype(jnp.float32)  # (C, rows, LANE)
-    mean = jnp.sum(d * wn[:, None, None], axis=0)  # (rows, LANE)
-    x = x_ref[...].astype(jnp.float32)
-    m = m_ref[...].astype(jnp.float32)
-    dmean = gamma * mean
-    new_m = c_mm * m + c_md * dmean
-    mean_ref[...] = mean
-    newm_ref[...] = new_m.astype(newm_ref.dtype)
-    newx_ref[...] = (x + c_xd * dmean).astype(newx_ref.dtype)
+def _make_kernel(write_x: bool, write_m: bool):
+    """Kernel body emitting only the adopted outputs (and reading only the
+    buffers they need): a pass with a statically-zero param step never
+    reads x or writes x' — the skip is a real HBM-bandwidth skip, not a
+    discarded output XLA can't DCE out of a pallas_call."""
+
+    def kernel(coef_ref, wn_ref, d_ref, *refs):
+        c_mm = coef_ref[0, 0]
+        c_md = coef_ref[0, 1]
+        c_xd = coef_ref[0, 2]
+        gamma = coef_ref[0, 3]  # staleness discount on the folded mean
+        wn = wn_ref[...][:, 0].astype(jnp.float32)  # (C,) mask/|S| weights
+        d = d_ref[...].astype(jnp.float32)  # (C, rows, LANE)
+        mean = jnp.sum(d * wn[:, None, None], axis=0)  # (rows, LANE)
+        dmean = gamma * mean
+        refs = list(refs)
+        x_ref = refs.pop(0) if write_x else None
+        m_ref = refs.pop(0) if write_m else None
+        if write_x:
+            newx_ref = refs.pop(0)
+        if write_m:
+            newm_ref = refs.pop(0)
+        mean_ref = refs.pop(0)
+        if write_x:
+            x = x_ref[...].astype(jnp.float32)
+            newx_ref[...] = (x + c_xd * dmean).astype(newx_ref.dtype)
+        if write_m:
+            m = m_ref[...].astype(jnp.float32)
+            newm_ref[...] = (c_mm * m + c_md * dmean).astype(newm_ref.dtype)
+        mean_ref[...] = mean
+
+    return kernel
 
 
-@partial(jax.jit, static_argnames=("m_dtype", "block_elems", "interpret"))
+@partial(jax.jit, static_argnames=("m_dtype", "block_elems", "interpret",
+                                   "write_x", "write_m"))
 def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
-                       block_elems: int = DEFAULT_BLOCK, interpret: bool = True):
+                       block_elems: int = DEFAULT_BLOCK, interpret: bool = True,
+                       write_x: bool = True, write_m: bool = True):
     """deltas: (C, P); wn: (C,) premultiplied mask/|S| weights; x, m: (P,);
     coefs: (4,) f32 (c_mm, c_md, c_xd, γ) where γ is the staleness
     discount applied to the mean before the EMA/step (1.0 = sync exact).
     Returns (new_x, new_m, mean) with new_m in ``m_dtype`` (default
-    m.dtype) and mean in f32 (UNdiscounted)."""
+    m.dtype) and mean in f32 (UNdiscounted).
+
+    ``write_x``/``write_m`` (static) drop the param-step / momentum-EMA
+    outputs — AND their input reads — from the launch entirely; the
+    corresponding return slot is ``None``.  Multi-pass folds (scaffold's
+    c-EMA pass, the post-step algorithms' c_xd=0 passes) use this so a
+    structurally-skipped update costs zero plane traffic."""
     C, n = deltas.shape
     m_dt = jnp.dtype(m_dtype) if m_dtype is not None else m.dtype
     rows = block_elems // LANE
@@ -88,7 +113,6 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
         return a.reshape(padded // LANE, LANE)
 
     dr = jnp.pad(deltas, ((0, 0), (0, pad))).reshape(C, padded // LANE, LANE)
-    xr, mr = prep(x), prep(m)
     wn_l = jnp.zeros((C, LANE), jnp.float32).at[:, 0].set(wn.astype(jnp.float32))
     nblocks = padded // block_elems
 
@@ -96,20 +120,32 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
     plane = pl.BlockSpec((C, rows, LANE), lambda i: (0, i, 0))
     smem = pl.BlockSpec((1, 4), lambda i: (0, 0))
     wspec = pl.BlockSpec((C, LANE), lambda i: (0, 0))
-    new_x, new_m, mean = pl.pallas_call(
-        _kernel,
+    operands = [coefs.astype(jnp.float32).reshape(1, 4), wn_l, dr]
+    in_specs = [smem, wspec, plane]
+    out_specs, out_shape = [], []
+    if write_x:
+        xr = prep(x)
+        operands.append(xr)
+        in_specs.append(vec)
+        out_specs.append(vec)
+        out_shape.append(jax.ShapeDtypeStruct(xr.shape, x.dtype))
+    if write_m:
+        mr = prep(m)
+        operands.append(mr)
+        in_specs.append(vec)
+        out_specs.append(vec)
+        out_shape.append(jax.ShapeDtypeStruct(mr.shape, m_dt))
+    out_specs.append(vec)
+    out_shape.append(jax.ShapeDtypeStruct((padded // LANE, LANE), jnp.float32))
+    outs = pl.pallas_call(
+        _make_kernel(write_x, write_m),
         grid=(nblocks,),
-        in_specs=[smem, wspec, plane, vec, vec],
-        out_specs=[vec, vec, vec],
-        out_shape=[
-            jax.ShapeDtypeStruct(xr.shape, x.dtype),
-            jax.ShapeDtypeStruct(mr.shape, m_dt),
-            jax.ShapeDtypeStruct(xr.shape, jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(coefs.astype(jnp.float32).reshape(1, 4), wn_l, dr, xr, mr)
-    return (
-        new_x.reshape(padded)[:n],
-        new_m.reshape(padded)[:n],
-        mean.reshape(padded)[:n],
-    )
+    )(*operands)
+    outs = [o.reshape(padded)[:n] for o in outs]
+    new_x = outs.pop(0) if write_x else None
+    new_m = outs.pop(0) if write_m else None
+    return new_x, new_m, outs[0]

@@ -1,4 +1,9 @@
-"""jit'd public wrapper for the fused server round-close kernel."""
+"""jit'd public wrappers for the fused server round-close kernel.
+
+``fused_server_step`` launches one coefficient-row pass; ``fused_fold``
+executes ALL of an ``AlgorithmSpec``'s declarative fold rows
+(``repro.core.registry.FoldPass``) against the cohort's uplink planes —
+the registry-driven replacement for the old per-algorithm dispatch."""
 from __future__ import annotations
 
 import jax
@@ -12,14 +17,16 @@ INTERPRET = jax.default_backend() != "tpu"
 
 
 def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
-                      discount=1.0):
+                      discount=1.0, write_x=True, write_m=True):
     """Masked cohort mean + momentum EMA + param step, one pass over (C, P).
 
     deltas (C, P), wn (C,) = mask/|S|, x (P,), m (P,).  Coefficients may be
     traced per-round scalars.  ``discount`` is the staleness weight γ the
     async engine applies to folded in-flight cohorts (rides SMEM with the
     other coefficients; 1.0 = sync, exact).  Returns
-    (new_x, new_m, mean_delta) with mean_delta UNdiscounted.
+    (new_x, new_m, mean_delta) with mean_delta UNdiscounted; a statically
+    dropped output (``write_x``/``write_m`` False) comes back ``None`` and
+    costs no plane traffic.
     """
     coefs = jnp.stack([
         jnp.asarray(c_mm, jnp.float32),
@@ -28,5 +35,58 @@ def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
         jnp.asarray(discount, jnp.float32),
     ])
     return server_update_flat(
-        deltas, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET
+        deltas, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET,
+        write_x=write_x, write_m=write_m,
     )
+
+
+def fused_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0):
+    """Execute an ``AlgorithmSpec``'s fold rows as fused kernel passes.
+
+    ``planes`` maps plane names ("delta"/"state_delta"/"extra") to the
+    cohort's raw ``(C, P)`` uplink planes; ``wn`` = mask/|S|.  Each
+    ``FoldPass`` becomes one ``fused_server_step`` launch; statically-zero
+    coefficients skip the corresponding state adoption (a pass with
+    ``c_xd == 0.0`` never rewrites params, a pass with ``c_md == 0.0,
+    c_mm == 1.0`` never re-rounds the momentum buffer) — the same
+    structural skips the jnp interpreter (``AlgorithmSpec.server_update``)
+    applies, so the two routes stay step-for-step comparable.
+
+    Honors ``cfg.aggregate_dtype`` exactly like the jnp paths: uplink
+    planes are quantized BEFORE the reduction (the kernel body then
+    accumulates in f32); only the reduction inputs are cast — the
+    client-state scatter keeps the unquantized plane, as the tree oracle
+    does.  Returns ``(new_x, new_m, mean_delta)`` with ``mean_delta`` the
+    UNdiscounted mean of the "delta" pass (metrics + post-steps consume
+    it).
+    """
+    # deferred import: repro.core.engine imports this module at package
+    # init, so a module-level registry import would be circular
+    from repro.core.registry import _fold_coef, _is_static_one, _is_static_zero
+
+    agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
+
+    def q(plane):
+        return plane if agg_dt == jnp.float32 else plane.astype(agg_dt)
+
+    m_dt = (jnp.dtype(getattr(cfg, "momentum_dtype", "float32"))
+            if spec.momentum_store == "momentum_dtype" else jnp.float32)
+    mean_delta = None
+    for p in spec.fold:
+        c_mm = _fold_coef(p.c_mm, cfg, eta_l, n_active)
+        c_md = _fold_coef(p.c_md, cfg, eta_l, n_active)
+        c_xd = _fold_coef(p.c_xd, cfg, eta_l, n_active)
+        adopt_x = not _is_static_zero(p.c_xd)
+        adopt_m = not (_is_static_zero(p.c_md) and _is_static_one(p.c_mm))
+        new_x, new_m, mean = fused_server_step(
+            q(planes[p.plane]), wn, x, m, c_mm, c_md, c_xd,
+            m_dtype=m_dt, discount=discount,
+            write_x=adopt_x, write_m=adopt_m,
+        )
+        if p.plane == "delta":
+            mean_delta = mean
+        if adopt_x:
+            x = new_x
+        if adopt_m:
+            m = new_m
+    return x, m, mean_delta

@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FedConfig, get_config
-from repro.core.algorithms import server_init
+from repro.core.algorithms import get_algorithm, server_init
 from repro.core.engine import FederatedEngine, FedState
 from repro.launch.hlo_stats import collective_stats, op_census
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, n_chips
@@ -112,7 +112,12 @@ def build_and_lower(
         lambda x: jax.ShapeDtypeStruct(x.shape, pd)
         if jnp.issubdtype(x.dtype, jnp.floating) else x, p_sds
     )
-    srv_sds = jax.eval_shape(lambda: server_init(p_sds, momentum_dtype))
+    # state planes derive from the registered spec's flags — a spec without
+    # a second moment never allocates (or shards) the extra plane
+    algo_spec = get_algorithm(algo)
+    srv_sds = jax.eval_shape(lambda: server_init(
+        p_sds, momentum_dtype,
+        needs_second_moment=algo_spec.needs_second_moment))
     state_sds = FedState(
         params=p_sds, server=srv_sds, client_states=None,
         rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
@@ -127,7 +132,11 @@ def build_and_lower(
         (b.shape[0], *b.shape[2:]), b.dtype), batches_sds)
 
     p_spec = param_specs(p_sds, cfg, mesh)
-    srv_spec = type(srv_sds)(momentum=p_spec, second_moment=p_spec, round=P())
+    srv_spec = type(srv_sds)(
+        momentum=p_spec,
+        second_moment=p_spec if srv_sds.second_moment is not None else None,
+        round=P(),
+    )
     state_spec = FedState(params=p_spec, server=srv_spec, client_states=None, rng=P())
     batch_spec = jax.tree_util.tree_map(
         lambda _: P("data", None, None, None), batches_sds

@@ -1,9 +1,11 @@
 """Federated training driver — the paper's experiment runner.
 
-Runs any algorithm in {fedcm, fedavg, fedadam, scaffold, feddyn, mimelite}
-on Dirichlet-partitioned synthetic classification (paper §6.1 scaled; see
-EXPERIMENTS.md §Repro) or on a federated LM task where every client holds a
-*different* Markov chain (natural heterogeneity).
+Runs any REGISTERED algorithm (``repro.core.registry``; ``--list-algos``
+prints each spec's state planes + kernel routing, ``--algo`` choices are
+the registry itself) on Dirichlet-partitioned synthetic classification
+(paper §6.1 scaled; see EXPERIMENTS.md §Repro) or on a federated LM task
+where every client holds a *different* Markov chain (natural
+heterogeneity).
 
 Rounds between evaluations execute as ONE fused ``engine.run_rounds`` scan
 (cohort sampling + minibatch draws on-device, state donated) — per-round
@@ -38,7 +40,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.core import FederatedEngine, make_eval_fn
+from repro.core import (
+    FederatedEngine,
+    describe_algorithm,
+    get_algorithm,
+    list_algorithms,
+    make_eval_fn,
+)
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 from repro.utils.metrics import MetricLogger
@@ -133,10 +141,27 @@ def run_federated(
     return acc, log
 
 
+def list_algos_text() -> str:
+    """One line per registered algorithm: state-plane requirements + kernel
+    routing, rendered from the registry (the same ``describe_algorithm``
+    rows the kernels/README.md table is generated from)."""
+    rows = [describe_algorithm(get_algorithm(n)) for n in list_algorithms()]
+    cols = ["algorithm", "local step", "server fold", "state planes"]
+    widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    lines += ["  ".join(r[c].ljust(widths[c]) for c in cols) for r in rows]
+    return "\n".join(lines)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--algo", default="fedcm",
-                    choices=["fedcm", "fedavg", "fedadam", "scaffold", "feddyn", "mimelite"])
+    # choices come FROM the registry: a freshly-registered algorithm is
+    # immediately runnable, and an unknown name errors with the registered
+    # list (argparse renders the choices)
+    ap.add_argument("--algo", default="fedcm", choices=list_algorithms())
+    ap.add_argument("--list-algos", action="store_true",
+                    help="print every registered algorithm (state-plane "
+                         "requirements + kernel routing) and exit")
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--cohort", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=100)
@@ -217,6 +242,9 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
 def main(argv=None) -> int:
     ap = build_parser()
     args = ap.parse_args(argv)
+    if args.list_algos:
+        print(list_algos_text())
+        return 0
     use_async = args.async_pipeline or args.pipeline_depth > 1 or args.staleness > 0
     if args.per_round and use_async:
         ap.error("--per-round dispatches one round per jit call; the async "

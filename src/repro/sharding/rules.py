@@ -238,13 +238,22 @@ def _cache_shape(cfg: ModelConfig, shape: ShapeConfig):
 
 def fed_state_specs(params_specs: Any, cfg_fed, mesh) -> Any:
     """Specs for FedState: params + ServerState(momentum, second_moment) are
-    params-shaped; stacked client states get a leading fsdp cohort axis."""
+    params-shaped; stacked client states get a leading fsdp cohort axis.
+    Which planes EXIST is derived from the registered spec's state-plane
+    flags, mirroring the engine's allocation."""
+    from repro.core.registry import get_algorithm
+
     fsdp, _ = _axes(mesh)
+    algo = get_algorithm(cfg_fed.algo)
 
     def stack(spec: P) -> P:
         return P(fsdp, *spec)
 
-    server = dict(momentum=params_specs, second_moment=params_specs, round=P())
-    client_states = jax.tree_util.tree_map(stack, params_specs) if cfg_fed.algo in (
-        "scaffold", "feddyn") else None
+    server = dict(
+        momentum=params_specs,
+        second_moment=params_specs if algo.needs_second_moment else None,
+        round=P(),
+    )
+    client_states = (jax.tree_util.tree_map(stack, params_specs)
+                     if algo.needs_client_state else None)
     return dict(params=params_specs, server=server, client_states=client_states, rng=P())

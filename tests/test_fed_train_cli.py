@@ -71,6 +71,35 @@ def test_per_round_conflicts_with_async():
         assert e.value.code == 2  # argparse error exit
 
 
+def test_algo_choices_come_from_registry(capsys):
+    """--algo choices ARE the registry: a freshly registered name parses,
+    an unknown one errors naming the registered set."""
+    from repro.core import list_algorithms
+
+    assert tuple(
+        build_parser()._option_string_actions["--algo"].choices
+    ) == list_algorithms()
+    assert _resolved(["--algo", "fedavgm"]).algo == "fedavgm"
+    with pytest.raises(SystemExit) as e:
+        build_parser().parse_args(["--algo", "nope"])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "fedcm" in err and "fedavgm" in err  # the registry list, rendered
+
+
+def test_list_algos_prints_registry(capsys):
+    """--list-algos prints every registered spec's state planes + kernel
+    routing and exits 0 without touching data or the engine."""
+    from repro.core import list_algorithms
+
+    assert main(["--list-algos"]) == 0
+    out = capsys.readouterr().out
+    for name in list_algorithms():
+        assert name in out
+    assert "fed_direction" in out and "server_update" in out
+    assert "client_state" in out  # state-plane requirements rendered
+
+
 def test_dryrun_artifact_default_mode(tmp_path, monkeypatch):
     art = tmp_path / "fed_train_dryrun.json"
     monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.core import FederatedEngine, FlatSpec
+from repro.core import FederatedEngine, FlatSpec, list_algorithms
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 
@@ -138,10 +138,10 @@ def _assert_close(a, b, atol=1e-5, rtol=1e-5):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=rtol, atol=atol)
 
 
-@pytest.mark.parametrize(
-    "algo", ["fedcm", "fedavg", "fedadam", "scaffold", "feddyn", "mimelite"]
-)
+@pytest.mark.parametrize("algo", list_algorithms())
 def test_flat_plane_matches_tree_oracle(algo):
+    """EVERY registered algorithm (the registry is the parametrization —
+    a newly registered spec is held to this automatically)."""
     cfg, eng_flat, data, model = _setup(algo)
     assert cfg.use_flat_plane  # flat is the default engine
     eng_tree = FederatedEngine(

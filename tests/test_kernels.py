@@ -139,7 +139,9 @@ def test_fed_direction_mixed_dtype_operands(dtype):
 
 
 def test_flat_direction_step_algorithm_dispatch():
-    """ops-level dispatch builds the right affine form per algorithm."""
+    """ops-level dispatch resolves each spec's DirectionRow (named streams:
+    momentum = the broadcast buffer, client_state = c_i / λ_i) into the
+    right affine kernel launch."""
     from repro.configs.base import FedConfig
 
     n = 513
@@ -152,19 +154,40 @@ def test_flat_direction_step_algorithm_dispatch():
     cfg = FedConfig(alpha=0.2, feddyn_alpha=0.05)
     eta = jnp.float32(0.1)
 
+    # (per-client state plane, expected update) — the broadcast buffer m
+    # doubles as scaffold's c, exactly as the engine feeds it
     cases = {
-        "fedcm": x - eta * (0.2 * g + 0.8 * m),
-        "fedavg": x - eta * g,
-        "scaffold": x - eta * (g - c_i + m),
-        "feddyn": x - eta * (g - lam + 0.05 * (x - x0)),
+        "fedcm": (None, x - eta * (0.2 * g + 0.8 * m)),
+        "fedavg": (None, x - eta * g),
+        "fedavgm": (None, x - eta * g),
+        "fedacg": (None, x - eta * g),
+        "scaffold": (c_i, x - eta * (g - c_i + m)),
+        "feddyn": (lam, x - eta * (g - lam + 0.05 * (x - x0))),
     }
-    for name, ref in cases.items():
-        cst = (c_i, m) if name == "scaffold" else (lam if name == "feddyn" else None)
+    for name, (cst, ref) in cases.items():
         out = flat_direction_step(name, cfg, x, g, m, cst, x0, eta)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-5, atol=2e-6, err_msg=name)
     with pytest.raises(KeyError):
         flat_direction_step("nope", cfg, x, g, m, None, x0, eta)
+
+
+def test_flat_direction_step_escape_hatch_spec():
+    """A spec with a non-affine direction_fn bypasses the kernel but keeps
+    the same x ← x − η_l·v contract on flat buffers."""
+    from repro.configs.base import FedConfig
+    from repro.core import AlgorithmSpec
+
+    n = 257
+    x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    spec = AlgorithmSpec(
+        name="_signsgd_toy", direction_row=None,
+        direction_fn=lambda cfg, m, cst, xx, x0, gg: jnp.sign(gg),
+    )
+    out = flat_direction_step(spec, FedConfig(), x, g, None, None, x, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x - 0.1 * jnp.sign(g)),
+                               rtol=1e-6, atol=1e-7)
 
 
 # ----------------------------------------------------------------------
@@ -204,6 +227,27 @@ def test_server_update_sweep(C, P, masked):
         out_g = fused_server_step(garbage, wn, x, m, 0.9, 0.1, -2.0)
         for o, og in zip(out, out_g):
             np.testing.assert_array_equal(np.asarray(o), np.asarray(og))
+
+
+@pytest.mark.parametrize("write_x,write_m", [(True, False), (False, True),
+                                             (False, False)])
+def test_server_update_reduced_outputs(write_x, write_m):
+    """A pass that structurally skips the param step / momentum EMA drops
+    the output (and its input read) from the launch: the emitted subset is
+    bitwise the full launch's, skipped slots come back None."""
+    C, P = 4, 1000
+    deltas = jnp.asarray(RNG.normal(size=(C, P)), jnp.float32)
+    wn = jnp.full((C,), 0.25, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    full = fused_server_step(deltas, wn, x, m, 0.9, 0.1, -2.0)
+    part = fused_server_step(deltas, wn, x, m, 0.9, 0.1, -2.0,
+                             write_x=write_x, write_m=write_m)
+    for keep, p_out, f_out in zip((write_x, write_m, True), part, full):
+        if keep:
+            np.testing.assert_array_equal(np.asarray(p_out), np.asarray(f_out))
+        else:
+            assert p_out is None
 
 
 def test_server_update_momentum_dtype_override():

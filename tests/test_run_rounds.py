@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FedConfig
-from repro.core import FederatedEngine
+from repro.core import FederatedEngine, list_algorithms
 from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 from repro.utils.trees import tree_cast
@@ -108,12 +108,11 @@ def test_run_rounds_rejects_nonpositive():
         eng.run_rounds(_fresh_state(eng, model), data, 0)
 
 
-@pytest.mark.parametrize(
-    "algo", ["fedcm", "mimelite", "fedavg", "fedadam", "scaffold", "feddyn"]
-)
+@pytest.mark.parametrize("algo", list_algorithms())
 def test_fused_kernel_path_matches_reference(algo):
     """Flat engine + Pallas kernels (fed_direction local steps, fused
-    server round-close where covered) vs the unfused jnp flat path."""
+    server fold-row passes + pure post-steps) vs the unfused jnp flat
+    path — for EVERY registered algorithm (the registry parametrizes)."""
     cfg, eng, data, model = _setup(algo)
     engk = FederatedEngine(replace(cfg, use_fused_kernel=True), eng.loss_fn, batch_size=8)
     s_ref, m_ref = eng.run_rounds(_fresh_state(eng, model), data, 3)
@@ -210,13 +209,12 @@ def _assert_state_equal(a, b, check_master=False):
             )
 
 
-@pytest.mark.parametrize(
-    "algo", ["fedcm", "mimelite", "fedavg", "fedadam", "scaffold", "feddyn"]
-)
+@pytest.mark.parametrize("algo", list_algorithms())
 def test_async_depth1_is_exactly_run_rounds(algo):
-    """run_rounds_async(D=1, S=0) IS the sync schedule: every algorithm's
-    trajectory AND per-round metrics must match run_rounds f32-EXACTLY
-    (bitwise) — the ring degenerates to push-then-pop of the same slot."""
+    """run_rounds_async(D=1, S=0) IS the sync schedule: EVERY registered
+    algorithm's trajectory AND per-round metrics must match run_rounds
+    f32-EXACTLY (bitwise) — the ring degenerates to push-then-pop of the
+    same slot."""
     cfg, eng, data, model = _setup(algo)
     s_sync, m_sync = eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
     s_async, m_async = eng.run_rounds_async(
@@ -233,10 +231,11 @@ def test_async_depth1_is_exactly_run_rounds(algo):
     assert np.all(np.asarray(m_async.folded) == 1.0)
 
 
-@pytest.mark.parametrize("algo", ["fedcm", "scaffold"])
+@pytest.mark.parametrize("algo", ["fedcm", "scaffold", "fedadam"])
 def test_async_depth1_kernel_path_is_exactly_run_rounds(algo):
     """Same degenerate-schedule contract on the fused-kernel path (the
-    staleness-discount SMEM scalar is 1.0 there — must stay exact)."""
+    staleness-discount SMEM scalar is 1.0 there — must stay exact).
+    fedadam covers a spec whose round-close is fold pass + pure post."""
     cfg, eng, data, model = _setup(algo, use_fused_kernel=True)
     s_sync, _ = eng.run_rounds(_fresh_state(eng, model), data, 3)
     s_async, _ = eng.run_rounds_async(
