@@ -167,3 +167,20 @@ def print_table(title: str, rows: List[Dict], cols: List[str]):
     print("  " + "  ".join(c.ljust(widths[c]) for c in cols))
     for r in rows:
         print("  " + "  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def git_rev() -> str:
+    """Short rev of the working checkout — perf artifacts stamp themselves
+    with it so trajectory rows never attribute one commit's numbers to
+    another (the cohort_sharded sweep runs in a separate process/CI job
+    from the fused_rounds summary that folds it in)."""
+    import subprocess
+
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=Path(__file__).parent,
+            timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"

@@ -52,8 +52,11 @@ Timing is interleaved min-of-N (alternating engines) so slow drift on a
 shared host cannot bias one path.  Artifact:
 benchmarks/artifacts/fused_rounds.json with per-path seconds, rounds/s,
 the fused-vs-sequential speedup, and the flat-vs-tree speedup per
-workload (the perf trajectory tracked per-PR).  Run via ``python -m
-benchmarks.run`` or directly:
+workload.  Every run also appends a rounds/s-per-workload row (keyed by
+git rev, folding in benchmarks/cohort_sharded.py's artifact when present
+— that sweep needs its own multi-device process) to the TOP-LEVEL
+``BENCH_fused_rounds.json`` — the per-PR perf trajectory CI uploads.
+Run via ``python -m benchmarks.run`` or directly:
 ``PYTHONPATH=src python -m benchmarks.fused_rounds [--rounds N]``.
 """
 from __future__ import annotations
@@ -72,6 +75,13 @@ from repro.data import FederatedData, make_synthetic_classification
 from repro.models.small import classification_loss, mlp_classifier
 
 ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "fused_rounds.json"
+#: the cohort-parallel sweep writes its own artifact (it needs a multi-
+#: device process: benchmarks/cohort_sharded.py sets XLA_FLAGS pre-import);
+#: when present it is folded into the trajectory summary below
+COHORT_ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "cohort_sharded.json"
+#: top-level per-PR perf trajectory: rounds/s per workload, one entry per
+#: commit — the diffable history CI uploads (and the repo carries)
+BENCH_SUMMARY = Path(__file__).resolve().parents[1] / "BENCH_fused_rounds.json"
 
 WORKLOADS = {
     # dims, cohort, local_steps, batch — see module docstring
@@ -272,6 +282,56 @@ def _measure_algo_sweep(rounds, quiet, dims=(32, 64, 64, 10), cohort=8, K=2, B=1
     return result
 
 
+def write_trajectory_summary(result: dict) -> dict:
+    """Append this run's rounds/s-per-workload row to the top-level
+    ``BENCH_fused_rounds.json`` trajectory (one entry per commit — an
+    existing entry for the same rev is replaced, so re-runs update in
+    place).  Folds in the cohort-parallel sweep's artifact when
+    ``benchmarks/cohort_sharded.py`` has run in this checkout AT THIS
+    REV — a stale (checked-in, earlier-commit) artifact is flagged, not
+    attributed to the current rev."""
+    from benchmarks.common import git_rev
+
+    entry = {
+        "rev": git_rev(),
+        "rounds_per_s": {
+            "sequential": result["sequential_rounds_per_s"],
+            "update_bound_tree": result["update_bound"]["tree_fused_rounds_per_s"],
+            "update_bound_flat": result["update_bound"]["flat_fused_rounds_per_s"],
+            "paper_scaled_flat": result["paper_scaled"]["flat_fused_rounds_per_s"],
+            "async_d2": result["async_pipeline"]["async_d2_rounds_per_s"],
+            "algo_sweep": result["algo_sweep"]["rounds_per_s"],
+        },
+    }
+    if COHORT_ARTIFACT.exists():
+        cs = json.loads(COHORT_ARTIFACT.read_text())
+        if cs.get("rev") == entry["rev"]:
+            entry["cohort_sharded"] = {
+                "devices_visible": cs.get("devices_visible"),
+                "cpu_count": cs.get("cpu_count"),
+            }
+            for wl in ("update_bound", "update_bound_c64", "cohort_scaled"):
+                if wl in cs:
+                    row = cs[wl]
+                    entry["cohort_sharded"][wl] = {
+                        k: v for k, v in row.items()
+                        if k.endswith(("rounds_per_s", "speedup"))
+                    }
+        else:
+            entry["cohort_sharded"] = {"stale_rev": cs.get("rev")}
+    data = {"trajectory": []}
+    if BENCH_SUMMARY.exists():
+        try:
+            data = json.loads(BENCH_SUMMARY.read_text())
+        except json.JSONDecodeError:
+            pass
+    traj = [e for e in data.get("trajectory", []) if e.get("rev") != entry["rev"]]
+    traj.append(entry)
+    data = {"trajectory": traj, "latest": entry}
+    BENCH_SUMMARY.write_text(json.dumps(data, indent=1))
+    return entry
+
+
 def main(rounds: int = 60, alts: int = 8, quiet: bool = False) -> dict:
     result = {
         name: _measure(name, rounds=rounds, alts=alts, quiet=quiet, **wl)
@@ -289,8 +349,9 @@ def main(rounds: int = 60, alts: int = 8, quiet: bool = False) -> dict:
     result["fused_rounds_per_s"] = head["flat_fused_rounds_per_s"]
     ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
     ARTIFACT.write_text(json.dumps(result, indent=1))
+    write_trajectory_summary(result)
     if not quiet:
-        print(f"  (artifact: {ARTIFACT.name})")
+        print(f"  (artifact: {ARTIFACT.name}; trajectory: {BENCH_SUMMARY.name})")
     return result
 
 

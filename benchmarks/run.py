@@ -64,6 +64,23 @@ def main() -> int:
         fr(rounds=20 if args.quick else 60, alts=2 if args.quick else 8)
 
     print("\n" + "=" * 72)
+    print("BENCHMARK 5b — cohort-parallel sweep (separate multi-device process)")
+    print("=" * 72)
+    if not args.skip_fed:
+        # cohort_sharded must own its process: XLA_FLAGS (8 emulated
+        # devices) has to be set before jax initializes, and this session's
+        # jax is already live.  Its artifact feeds the next fused_rounds
+        # trajectory row.
+        import subprocess
+
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.cohort_sharded",
+             "--rounds", "6" if args.quick else "20", "--alts", "2"],
+        )
+        if r.returncode != 0:
+            print("(cohort_sharded sweep failed — see output above)")
+
+    print("\n" + "=" * 72)
     print("BENCHMARK 6/6 — roofline table (from dry-run artifacts)")
     print("=" * 72)
     from benchmarks.roofline import load_rows

@@ -204,6 +204,9 @@ class FedConfig:
     adam_tau: float = 1e-2
     # FedDyn
     feddyn_alpha: float = 0.01
+    # FedProx: proximal strength μ of the registered "fedprox" spec
+    # (local direction v = g + μ·(x − x_t) — a pure c_x DirectionRow)
+    fedprox_mu: float = 0.01
     # FedACG-style server acceleration: lookahead/momentum coefficient λ of
     # the registered "fedacg" spec (m' = λ·m + Δ_{t+1}; the server steps
     # along Δ_{t+1} + λ·m')
@@ -246,6 +249,13 @@ class FedConfig:
     # (pipeline_depth−1) rounds stale is weighted γ^(depth−1) — rides the
     # fused server kernel's SMEM coefficient row.  1.0 = no discount.
     staleness_discount: float = 1.0
+    # cohort-parallel execution: number of devices to shard the client
+    # axis over (engine builds a ("clients",) mesh over the first N
+    # visible devices and runs the cohort via shard_map; the fold lowers
+    # to a reduce-scatter/all-gather).  0 = single-device execution.
+    # Requires use_flat_plane + use_fused_kernel.  An explicit mesh can
+    # instead be passed as FederatedEngine(..., cohort_mesh=...).
+    cohort_shard: int = 0
 
 
 @dataclass(frozen=True)

@@ -5,8 +5,9 @@ FedAvg [McMahan+17], FedAdam [Reddi+20], SCAFFOLD [Karimireddy+20b],
 FedDyn [Acar+21], MimeLite [Karimireddy+20a] — plus the wider
 momentum-corrected family the registry makes cheap to add: FedAvgM
 [Hsu+19] (server heavy-ball), FedAdagrad / FedYogi [Reddi+20] (adaptive
-server optimizers), and FedACG-style Nesterov server acceleration
-[Kim+22, arXiv:2201.03172].  Every algorithm is an ``AlgorithmSpec``
+server optimizers), FedACG-style Nesterov server acceleration
+[Kim+22, arXiv:2201.03172], and FedProx [Li+20] (the ``c_x``-only
+proximal row).  Every algorithm is an ``AlgorithmSpec``
 (``repro.core.registry``): a client-direction coefficient row, server-fold
 coefficient rows (+ optional pure post-step), and state-plane flags — the
 engine contains zero per-algorithm branches.
@@ -318,6 +319,17 @@ register_algorithm(AlgorithmSpec(
                    c_md=_c_alpha_pseudo_grad, c_xd=0.0),),
     server_post_fn=_fedyogi_post,
     needs_second_moment=True,
+))
+
+register_algorithm(AlgorithmSpec(
+    name="fedprox",
+    # Li+20 (MLSys): local objective f_i(x) + (μ/2)‖x − x_t‖² — the
+    # proximal gradient is the pure c_x row v = g + μ·(x − x_t).  No
+    # client state, no extra uplink: stateless like FedAvg (and μ=0 IS
+    # FedAvg), which is exactly why it stays data-only under every
+    # execution path, cohort sharding included.
+    direction_row=DirectionRow(c_x=lambda cfg: cfg.fedprox_mu),
+    fold=(FoldPass("delta", c_mm=0.0, c_md=_c_pseudo_grad, c_xd=_c_eta_g),),
 ))
 
 register_algorithm(AlgorithmSpec(

@@ -88,8 +88,29 @@ S-rounds-stale momentum), rotates it into the ring, and folds the uplink
 launched D−1 iterations ago through the staleness-discount-extended fused
 server kernel.  ``(D=1, S=0)`` reproduces ``run_rounds`` exactly; eval can
 ride inside the scan at an ``eval_every`` cadence (padded ``lax.map``) so
-train-with-eval is one jitted program.  The ring is also the seam where a
-multi-host cohort-axis reduce-scatter slots in (ROADMAP).
+train-with-eval is one jitted program.
+
+Cohort-parallel execution (``cohort_mesh`` / ``cfg.cohort_shard``): a
+``("clients",)`` mesh turns the round SPMD over the client axis.  The
+cohort phase runs inside ``shard_map`` — each device owns C/num_shards
+clients end-to-end (local-step scans, ``fed_direction`` launches, state
+gathers all device-local; ragged cohorts pad with zero-weight rows AFTER
+the gathers so the rng stream is untouched) — and the server fold lowers
+to the scattered kernel (``kernels/server_update/ops.scatter_fold``):
+``all_to_all`` transposes the ``(C, P)`` uplink planes to plane-column
+shards, each device reduces the COMPLETE cohort for its columns in the
+unsharded reduction order, runs the spec's fold rows on its ``x``/``m``
+chunks, and ``all_gather`` rebuilds the replicated planes.  That
+transpose-first decomposition (NOT ``psum_scatter``, which would
+re-associate the f32 sum) plus the server kernel's ≥2-step grid floor is
+what keeps sharded execution f32-BITWISE against the unsharded engine —
+for every registered algorithm, sync and async
+(tests/test_cohort_shard.py).  Under ``run_rounds_async`` the ring
+carries client-sharded planes, so the fold's collective sits D−1 rounds
+behind the launch it consumes — the latency the overlap hides.  Flat +
+kernel path only; the spec's ``server_post_fn`` runs replicated after
+the gather, and ``server_fn`` escape hatches get scattered means
+(``repro.core.flat.cohort_mean_scatter``) into a replicated escape.
 """
 from __future__ import annotations
 
@@ -107,16 +128,30 @@ from repro.configs.base import FedConfig
 from repro.core.algorithms import (
     Algorithm,
     ClientOutputs,
+    FlatClientOutputs,
     ServerState,
     client_state_init,
     get_algorithm,
     server_init,
     sparse_client_finalize,
 )
-from repro.core.flat import CohortUplink, FlatSpec, ring_push
+from repro.core.flat import (
+    CohortUplink,
+    FlatSpec,
+    cohort_mean_scatter,
+    pad_cohort,
+    ring_push,
+)
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
 from repro.kernels.fed_direction.ops import flat_direction_step
-from repro.kernels.server_update.ops import fused_fold
+from repro.kernels.server_update.ops import fused_fold, scatter_fold
+from repro.sharding.rules import (
+    COHORT_AXIS,
+    cohort_axis_size,
+    cohort_uplink_specs,
+    padded_cohort,
+)
+from repro.utils.compat import shard_map
 from repro.utils.trees import (
     ravel_leaves,
     tree_axpy,
@@ -375,6 +410,7 @@ class FederatedEngine:
         loss_fn: Callable[[Any, Any], jax.Array],
         batch_size: int = 50,
         client_sharding: Optional[Any] = None,  # NamedSharding for the cohort axis
+        cohort_mesh: Optional[Any] = None,  # Mesh with a "clients" axis
     ) -> None:
         self.cfg = cfg
         self.algo = get_algorithm(cfg.algo)
@@ -382,6 +418,41 @@ class FederatedEngine:
         self.batch_size = batch_size
         self.client_sharding = client_sharding
         self.analysis_unroll = False  # dry-run analysis form
+        # ---- cohort-parallel (SPMD-over-clients) execution path ----
+        # a Mesh with a "clients" axis turns every cohort phase into
+        # shard_map over that axis: each device owns C/num_shards clients
+        # end-to-end and the server fold becomes an explicit
+        # reduce-scatter/all-gather (kernels/server_update/ops.scatter_fold).
+        # cfg.cohort_shard > 0 is the data-only way to ask for it (the
+        # engine builds the mesh over the first N visible devices).
+        if cohort_mesh is None and getattr(cfg, "cohort_shard", 0) > 0:
+            from repro.launch.mesh import make_cohort_mesh
+
+            cohort_mesh = make_cohort_mesh(cfg.cohort_shard)
+        self.cohort_mesh = cohort_mesh
+        self._cohort_shards = 1
+        if cohort_mesh is not None:
+            if not cfg.use_flat_plane:
+                raise ValueError(
+                    "cohort-parallel execution runs on the flat parameter "
+                    "plane — it shards (C, P) uplink planes; set "
+                    "cfg.use_flat_plane=True (the tree path stays the "
+                    "single-device oracle)"
+                )
+            if not cfg.use_fused_kernel:
+                raise ValueError(
+                    "cohort-parallel execution rides the flat+kernel path "
+                    "(clients produce (C, P) planes, the fold is the "
+                    "scattered server kernel) — set cfg.use_fused_kernel="
+                    "True / pass --fused-kernel"
+                )
+            if client_sharding is not None:
+                raise ValueError(
+                    "cohort_mesh (shard_map over clients) and "
+                    "client_sharding (GSPMD cohort-axis constraints) are "
+                    "alternative lowerings of the same axis — pass one"
+                )
+            self._cohort_shards = cohort_axis_size(cohort_mesh)
         self._round_step = jax.jit(self._round_step_impl)
         # traced once per (shapes, n_rounds) — the compile-count regression
         # test asserts a 100-round run is ONE trace, not 100
@@ -582,6 +653,164 @@ class FederatedEngine:
         outs, losses = jax.vmap(one_client)(cohort_cst_tree, cohort_cst, batches, full)
         return outs, losses, cohort_cst
 
+    # -------------------------------------------------- cohort-parallel
+    @property
+    def _sharded(self) -> bool:
+        return self.cohort_mesh is not None
+
+    def _pad_cohort(self, tree, mode: str = "edge"):
+        """Pad the leading cohort axis to a multiple of the mesh's
+        ``"clients"`` axis.  Applied AFTER the minibatch/state gathers —
+        the rng stream and every real client's inputs stay bitwise those
+        of the unsharded round.  Data pads by edge-repeat (pad clients
+        compute on a real client's finite inputs — a batch-normalizing
+        loss_fn on all-zero input would emit NaN, and ``0 · NaN`` poisons
+        the fold); the weight row pads with exact zeros (``mode="zero"``)
+        so pad rows never count."""
+        target = padded_cohort(cohort_capacity(self.cfg), self._cohort_shards)
+        return pad_cohort(tree, target, mode=mode)
+
+    def _sharded_cohort_pass(self, fstate: FedState, batches, ids, mask,
+                             full_batches, spec: FlatSpec, m_t, eta_l):
+        """The cohort's client phase SPMD over the ``"clients"`` mesh axis:
+        each device runs the K-local-step update for its C/num_shards
+        clients end-to-end inside ``shard_map`` — sampling gathers happen
+        before entry (replicated rng), ``fed_direction`` kernel launches
+        stay device-local, and no collective runs until the fold.
+
+        Same contract as ``_flat_cohort_pass`` (kernel-path layout), with
+        the cohort axis PADDED to the shard count: ``outs`` planes are
+        ``(C_pad, P)`` sharded over clients, ``losses`` is ``(C_pad,)``,
+        and ``cohort_cst`` is the UNpadded ``(C, P)`` gather (the
+        client-state scatter consumes only real rows)."""
+        cfg, algo = self.cfg, self.algo
+
+        cohort_cst = None
+        if algo.needs_client_state:
+            cohort_cst = fstate.client_states[ids]  # (C, P): ONE gather
+        operands = {"batches": self._pad_cohort(batches)}
+        if cohort_cst is not None:
+            operands["cst"] = self._pad_cohort(cohort_cst)
+        if algo.needs_full_grad:
+            operands["full"] = self._pad_cohort(full_batches)
+
+        plane_keys = tuple(algo.uplink_planes)
+
+        def shard_body(x_t, m_t, eta_l, operands):
+            x0_tree = spec.unravel(x_t)
+            m_tree = spec.unravel(m_t, dtype=cfg.momentum_dtype)
+
+            def one_client(cst_i, batches_i, full_i):
+                return flat_client_update(
+                    algo, cfg, self.loss_fn, spec, x_t, x0_tree, m_t, m_tree,
+                    None, cst_i, batches_i, eta_l,
+                    full_grad_batch=full_i, unroll=self.analysis_unroll,
+                )
+
+            outs, losses = jax.vmap(one_client)(
+                operands.get("cst"), operands["batches"], operands.get("full")
+            )
+            out = {k: getattr(outs, k) for k in plane_keys}
+            out["losses"] = losses
+            return out
+
+        sh, rep = P(COHORT_AXIS), P()
+        out = shard_map(
+            shard_body,
+            mesh=self.cohort_mesh,
+            in_specs=(rep, rep, rep, {k: sh for k in operands}),
+            # uplink planes + the per-client loss row shard over clients —
+            # derived from the registry's state-plane flags
+            out_specs=cohort_uplink_specs(algo, extra=("losses",)),
+            check_vma=False,
+        )(fstate.params, m_t, eta_l, operands)
+        outs = FlatClientOutputs(
+            delta=out["delta"],
+            state_delta=out.get("state_delta"),
+            extra=out.get("extra"),
+        )
+        # replicate the per-client loss row before the metrics reduce it:
+        # summing a clients-sharded (C,) array would lower to per-device
+        # partial sums + all-reduce, re-associating the f32 sum away from
+        # the unsharded metric (the planes stay sharded — their reductions
+        # go through the scattered fold, which preserves order by design)
+        losses = jax.lax.with_sharding_constraint(
+            out["losses"], NamedSharding(self.cohort_mesh, P())
+        )
+        return outs, losses, cohort_cst
+
+    def _sharded_round_close(self, algo, fsrv, outs, wp, n_active, x_t, eta_l,
+                             discount=1.0):
+        """``_fused_round_close`` under cohort sharding: the fold rows run
+        through the scattered server kernel (``scatter_fold`` inside
+        ``shard_map`` — all_to_all to plane columns, device-local
+        full-cohort reduce, kernel launch per row, all_gather), and the
+        spec's pure post-step then runs on the REPLICATED ``(P,)`` planes
+        at the same program level (and with the same shapes) as the
+        unsharded close — elementwise posts stay bitwise that way."""
+        cfg = self.cfg
+        planes = {k: getattr(outs, k) for k in algo.fold_planes}
+        nsh = self._cohort_shards
+
+        def fold_body(planes, wp, n_active, x, m, eta_l):
+            return scatter_fold(
+                algo, cfg, planes, wp / n_active, n_active, x, m, eta_l,
+                discount=discount, axis_name=COHORT_AXIS, n_shards=nsh,
+            )
+
+        sh, rep = P(COHORT_AXIS), P()
+        new_x, new_m, mean_delta = shard_map(
+            fold_body,
+            mesh=self.cohort_mesh,
+            in_specs=({k: sh for k in planes}, rep, rep, rep, rep, rep),
+            out_specs=(rep, rep, rep),
+            check_vma=False,
+        )(planes, wp, n_active, x_t, fsrv.momentum, eta_l)
+        return self._close_post(algo, fsrv, new_x, new_m, mean_delta,
+                                n_active, eta_l, discount)
+
+    def _close_post(self, algo, fsrv, new_x, new_m, mean_delta, n_active,
+                    eta_l, discount):
+        """Shared tail of the kernel round close (fused AND scattered):
+        adopt the folded momentum, then run the spec's pure post-step on
+        the replicated planes with the discount-weighted mean.  ONE
+        implementation — the sync/async and sharded/unsharded closes must
+        never drift in how γ reaches the post."""
+        new_server = fsrv._replace(momentum=new_m)
+        if algo.server_post_fn is not None:
+            dmean = mean_delta if discount == 1.0 else discount * mean_delta
+            new_x, new_server = algo.server_post_fn(
+                self.cfg, new_x, new_server, dmean, n_active, eta_l
+            )
+        return new_x, new_server, mean_delta
+
+    def _sharded_means(self, outs, wp, n_active):
+        """Masked cohort means of every uplink plane as scattered
+        reductions (``cohort_mean_scatter`` inside ``shard_map``) — the
+        sharded analog of the kernel-path ``_masked_pmean`` calls feeding
+        a ``server_fn`` escape-hatch spec.  Returns (mean_delta, mean_sd,
+        mean_extra) with ``None`` for planes the spec never produced."""
+        cfg = self.cfg
+        agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
+        planes = {k: getattr(outs, k) for k in self.algo.uplink_planes
+                  if getattr(outs, k) is not None}
+        nsh = self._cohort_shards
+
+        def body(planes, wp, n_active):
+            return {k: cohort_mean_scatter(v, wp, n_active, COHORT_AXIS, nsh,
+                                           agg_dtype=agg_dt)
+                    for k, v in planes.items()}
+
+        sh, rep = P(COHORT_AXIS), P()
+        means = shard_map(
+            body,
+            mesh=self.cohort_mesh,
+            in_specs=({k: sh for k in planes}, rep, rep),
+            out_specs={k: rep for k in planes},
+            check_vma=False,
+        )(planes, wp, n_active)
+        return means.get("delta"), means.get("state_delta"), means.get("extra")
+
     def _masked_pmean(self, x, w, n_active):
         """Masked cohort mean of one uplink, reduced straight to a flat
         ``(P,)`` buffer (quantized to ``cfg.aggregate_dtype`` first, like
@@ -617,7 +846,9 @@ class FederatedEngine:
         eta_l = local_learning_rate(cfg, fstate.server.round)
         x_t = fstate.params  # (P,) f32
         m_t = fstate.server.momentum  # (P,) momentum_dtype
-        outs, losses, cohort_cst = self._flat_cohort_pass(
+        cohort_pass = (self._sharded_cohort_pass if self._sharded
+                       else self._flat_cohort_pass)
+        outs, losses, cohort_cst = cohort_pass(
             fstate, batches, ids, mask, full_batches, spec, m_t, eta_l
         )
 
@@ -626,28 +857,47 @@ class FederatedEngine:
         # never reduced, where the tree path pays for both)
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
+        # cohort-parallel: pad rows carry zero weight — trailing +0.0
+        # terms keep every reduction bitwise the unsharded one's
+        wp = self._pad_cohort(w, mode="zero") if self._sharded else w
         use_kernel = cfg.use_fused_kernel and algo.server_fn is None
 
         fsrv = fstate.server
-        if use_kernel:
+        if use_kernel and self._sharded:
+            new_params, new_server, mean_delta = self._sharded_round_close(
+                algo, fsrv, outs, wp, n_active, x_t, eta_l
+            )
+            new_server = new_server._replace(round=fsrv.round + 1)
+        elif use_kernel:
             new_params, new_server, mean_delta = self._fused_round_close(
                 algo, fsrv, outs, w, n_active, x_t, eta_l
             )
             new_server = new_server._replace(round=fsrv.round + 1)
         else:
-            mean_delta = self._masked_pmean(outs.delta, w, n_active)
+            if self._sharded:  # kernel-path spec with a server_fn escape
+                mean_delta, mean_sd, mean_extra = self._sharded_means(
+                    outs, wp, n_active
+                )
+            else:
+                mean_delta = self._masked_pmean(outs.delta, w, n_active)
+                mean_sd = self._masked_pmean(outs.state_delta, w, n_active)
+                mean_extra = self._masked_pmean(outs.extra, w, n_active)
             new_params, new_server = algo.server_update(
-                cfg, x_t, fsrv, mean_delta,
-                self._masked_pmean(outs.state_delta, w, n_active),
-                self._masked_pmean(outs.extra, w, n_active), n_active, eta_l,
+                cfg, x_t, fsrv, mean_delta, mean_sd, mean_extra,
+                n_active, eta_l,
             )
 
         # scatter updated client states back (only active cohort members):
-        # ONE scatter on the (N, P) plane (kernel path) or per-leaf like
-        # the tree oracle (jnp path)
+        # ONE scatter on the (N, P) plane (kernel path; sharded planes are
+        # padded — only real rows scatter) or per-leaf like the tree
+        # oracle (jnp path)
         new_cst = fstate.client_states
         if algo.needs_client_state:
-            if cfg.use_fused_kernel:  # (N, P) plane representation
+            if self._sharded:
+                C = ids.shape[0]
+                upd = cohort_cst + outs.state_delta[:C] * w[:, None]
+                new_cst = fstate.client_states.at[ids].set(upd)
+            elif cfg.use_fused_kernel:  # (N, P) plane representation
                 upd = cohort_cst + outs.state_delta * w[:, None]
                 new_cst = fstate.client_states.at[ids].set(upd)
             else:
@@ -661,7 +911,7 @@ class FederatedEngine:
 
         pay = self._payload_from_nbytes(spec.nbytes)
         metrics = RoundMetrics(
-            loss=jnp.sum(losses * w) / n_active,
+            loss=jnp.sum(losses * wp) / n_active,
             n_active=n_active,
             delta_norm=_flat_norm(mean_delta),
             momentum_norm=_flat_norm(m_t),
@@ -692,13 +942,8 @@ class FederatedEngine:
             algo, cfg, planes, w / n_active, n_active, x_t, fsrv.momentum,
             eta_l, discount=discount,
         )
-        new_server = fsrv._replace(momentum=new_m)
-        if algo.server_post_fn is not None:
-            dmean = mean_delta if discount == 1.0 else discount * mean_delta
-            new_x, new_server = algo.server_post_fn(
-                cfg, new_x, new_server, dmean, n_active, eta_l
-            )
-        return new_x, new_server, mean_delta
+        return self._close_post(algo, fsrv, new_x, new_m, mean_delta,
+                                n_active, eta_l, discount)
 
     # -------------------------------------------------- round
     def _round_step_impl(self, state: FedState, batches, ids, mask, full_batches):
@@ -1113,14 +1358,24 @@ class FederatedEngine:
         (``_masked_pmean``); only the per-client ``state_delta`` plane must
         survive to fold time (the scatter is per-client).
 
-        Returns (entry, n_active, cohort masked-mean loss)."""
+        Returns (entry, n_active, cohort masked-mean loss).
+
+        Cohort-parallel: the pass runs SPMD over the ``"clients"`` axis
+        and the ring entry's planes are the PADDED ``(C_pad, P)`` shards
+        (``ids``/``w`` padded to match; pad rows weigh zero) — the ring
+        then carries each device's own clients until the scattered fold
+        consumes them D−1 rounds later, which is what gives the
+        reduce-scatter D−1 rounds of compute to hide behind."""
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, fstate.server.round)
-        outs, losses, _ = self._flat_cohort_pass(
+        cohort_pass = (self._sharded_cohort_pass if self._sharded
+                       else self._flat_cohort_pass)
+        outs, losses, _ = cohort_pass(
             fstate, batches, ids, mask, full, spec, m_used, eta_l
         )
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
+        wp = self._pad_cohort(w, mode="zero") if self._sharded else w
 
         if cfg.use_fused_kernel:
             delta_e, extra_e = outs.delta, outs.extra
@@ -1136,11 +1391,11 @@ class FederatedEngine:
             delta=delta_e,
             state_delta=state_e,
             extra=extra_e,
-            ids=ids.astype(jnp.int32),
-            w=w,
+            ids=(self._pad_cohort(ids) if self._sharded else ids).astype(jnp.int32),
+            w=wp,
             eta_l=eta_l,
         )
-        return entry, n_active, jnp.sum(losses * w) / n_active
+        return entry, n_active, jnp.sum(losses * wp) / n_active
 
     def _fold_async_slot(self, fstate: FedState, entry: CohortUplink,
                          spec: FlatSpec, discount):
@@ -1155,19 +1410,30 @@ class FederatedEngine:
 
         Returns (new_fstate, ‖mean Δ‖ of the folded cohort)."""
         cfg, algo = self.cfg, self.algo
-        w = entry.w
+        w = entry.w  # (C_pad,) under cohort sharding — pad rows weigh 0
         n_active = jnp.sum(w)
         x_t = fstate.params
         fsrv = fstate.server
         use_kernel = cfg.use_fused_kernel and algo.server_fn is None
 
-        if use_kernel:
+        if use_kernel and self._sharded:
+            new_params, new_server, mean_delta = self._sharded_round_close(
+                algo, fsrv, entry, w, n_active, x_t, entry.eta_l,
+                discount=discount,
+            )
+        elif use_kernel:
             new_params, new_server, mean_delta = self._fused_round_close(
                 algo, fsrv, entry, w, n_active, x_t, entry.eta_l,
                 discount=discount,
             )
         else:
-            if cfg.use_fused_kernel:
+            if self._sharded:
+                # scattered reductions of the ring's sharded (C_pad, P)
+                # planes feeding the spec's server_fn escape hatch
+                mean_delta, mean_sd, mean_extra = self._sharded_means(
+                    entry, w, n_active
+                )
+            elif cfg.use_fused_kernel:
                 # kernel-path algorithm whose round-close is a ``server_fn``
                 # escape hatch: reduce the raw (C, P) planes exactly as the
                 # sync kernel path does
@@ -1202,7 +1468,16 @@ class FederatedEngine:
         # of non-participants untouched)
         new_cst = fstate.client_states
         if algo.needs_client_state:
-            if cfg.use_fused_kernel:  # (N, P) plane: ONE gather + scatter
+            if self._sharded:
+                # padded ring rows are dropped BEFORE the scatter: a pad
+                # id (0) colliding with a real cohort member would make
+                # the duplicate-index .set nondeterministic
+                C = cohort_capacity(cfg)
+                ids_r, w_r = entry.ids[:C], w[:C]
+                upd = (fstate.client_states[ids_r]
+                       + entry.state_delta[:C] * w_r[:, None])
+                new_cst = fstate.client_states.at[ids_r].set(upd)
+            elif cfg.use_fused_kernel:  # (N, P) plane: ONE gather + scatter
                 upd = fstate.client_states[entry.ids] + entry.state_delta * w[:, None]
                 new_cst = fstate.client_states.at[entry.ids].set(upd)
             else:

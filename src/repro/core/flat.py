@@ -183,6 +183,96 @@ class CohortUplink(NamedTuple):
     eta_l: jax.Array  # f32 η_l at launch (the fold must reuse it)
 
 
+def pad_cohort(tree, target: int, mode: str = "edge"):
+    """Pad the leading (cohort) axis of every leaf to ``target`` rows.
+
+    The cohort-parallel engine pads the sampled cohort to a multiple of the
+    ``"clients"`` mesh axis AFTER the minibatch/state gathers (so the rng
+    stream and every real client's data are bitwise those of the unsharded
+    round) and gives the pad rows zero weight: a trailing ``+ 0.0`` in the
+    masked fold is exact, which is what keeps the ragged-cohort case
+    bitwise against the unsharded oracle.  ``None`` passes through.
+
+    ``mode="edge"`` (default, for DATA: batches, gathered client states,
+    ids) repeats the last real row — the pad clients then run their local
+    steps on a real client's finite inputs, so a loss_fn that is
+    non-finite on all-zero input (batch-statistic normalizers) cannot
+    poison the fold through ``0 · NaN = NaN``.  ``mode="zero"`` is for
+    the WEIGHT row, whose pad entries must stay exactly 0.
+    """
+    if tree is None:
+        return None
+
+    def p(a):
+        C = a.shape[0]
+        if C >= target:
+            return a
+        widths = [(0, target - C)] + [(0, 0)] * (a.ndim - 1)
+        if mode == "edge":
+            return jnp.pad(a, widths, mode="edge")
+        return jnp.pad(a, widths)
+
+    return jax.tree_util.tree_map(p, tree)
+
+
+def cohort_to_columns(plane, axis_name: str, n_shards: int):
+    """Clients-sharded ``(C, P)`` plane → plane-column shards, INSIDE
+    ``shard_map``: pad the plane axis to a multiple of ``n_shards`` and
+    ``all_to_all`` so each device holds ``(C, ceil(P/n_shards))`` — the
+    COMPLETE cohort for its columns.  This is the reduce-scatter's first
+    half, decomposed so the subsequent device-local reduce runs over all
+    C clients in the unsharded reduction order (a ``psum_scatter`` would
+    pre-reduce per device and re-associate the f32 sum — the bitwise
+    oracle breaks).  Shared by every scattered reduction
+    (``cohort_mean_scatter`` here, ``scatter_fold`` in the server kernel
+    ops) — the decomposition is load-bearing, keep it in one place."""
+    Pn = plane.shape[-1]
+    chunk = -(-Pn // n_shards)
+    plane = jnp.pad(plane, ((0, 0), (0, chunk * n_shards - Pn)))
+    return jax.lax.all_to_all(plane, axis_name, split_axis=1, concat_axis=0,
+                              tiled=True)
+
+
+def plane_chunk(vec, axis_name: str, n_shards: int):
+    """This device's column chunk of a replicated ``(P,)`` plane (the
+    slice aligned with ``cohort_to_columns``'s layout)."""
+    Pn = vec.shape[-1]
+    chunk = -(-Pn // n_shards)
+    idx = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice(jnp.pad(vec, (0, chunk * n_shards - Pn)),
+                                 (idx * chunk,), (chunk,))
+
+
+def gather_plane(vec, axis_name: str, n: int):
+    """Inverse of ``plane_chunk``: all_gather the per-device column chunks
+    back to the replicated ``(n,)`` plane (pad columns dropped)."""
+    return jax.lax.all_gather(vec, axis_name, tiled=True)[:n]
+
+
+def cohort_mean_scatter(plane, w, n_active, axis_name: str, n_shards: int,
+                        agg_dtype=jnp.float32):
+    """Masked cohort mean of one ``(C, P)`` plane, lowered as an explicit
+    reduce-scatter + all-gather — call INSIDE ``shard_map`` with ``plane``
+    sharded over ``axis_name`` (local view ``(C/n_shards, P)``) and ``w``
+    replicated.
+
+    The reduce-scatter is decomposed as ``cohort_to_columns`` (cohort
+    shards → plane-column shards) followed by a device-local full-cohort
+    contraction: every device then reduces over the COMPLETE client axis
+    for its plane columns, in exactly the reduction order (and with
+    exactly the ``aggregate_dtype`` quantization) of the unsharded
+    ``_masked_pmean``.  The trailing ``gather_plane`` rebuilds the
+    replicated ``(P,)`` mean.
+    """
+    Pn = plane.shape[-1]
+    cols = cohort_to_columns(plane, axis_name, n_shards)
+    mean = (
+        jnp.tensordot(w.astype(agg_dtype), cols.astype(agg_dtype), axes=(0, 0))
+        .astype(jnp.float32) / n_active
+    )
+    return gather_plane(mean, axis_name, Pn)
+
+
 def ring_push(pending: Tuple[CohortUplink, ...], entry: CohortUplink):
     """Rotate the static-depth ring: append the just-launched uplink, pop
     the OLDEST for folding.  Returns ``(oldest, new_pending)``.

@@ -183,6 +183,37 @@ class AlgorithmSpec(NamedTuple):
     momentum_store: str = "float32"
 
     # ------------------------------------------------------------------
+    # derived uplink / ring layout (cohort-parallel engine consumes these)
+    # ------------------------------------------------------------------
+    @property
+    def uplink_planes(self) -> Tuple[str, ...]:
+        """Names of the cohort-stacked uplink planes this spec produces —
+        the ``(C, P)`` buffers that ride the async ring (``CohortUplink``)
+        and, under cohort sharding, the planes whose leading axis is
+        partitioned over the ``"clients"`` mesh axis.  Derived purely from
+        the state-plane flags: ``delta`` always, ``state_delta`` iff the
+        spec keeps per-client state, ``extra`` iff it uplinks a full-batch
+        gradient.  Ring and shard_map in/out specs are built from this —
+        never from algorithm names."""
+        names = ["delta"]
+        if self.needs_client_state and self.state_update_fn is not None:
+            names.append("state_delta")
+        if self.needs_full_grad:
+            names.append("extra")
+        return tuple(names)
+
+    @property
+    def fold_planes(self) -> Tuple[str, ...]:
+        """Uplink planes the ROUND CLOSE consumes (in first-use order).
+        For declarative folds these are the planes named by the
+        ``FoldPass`` rows — the set the scattered (reduce-scatter) fold
+        must transpose; a ``server_fn`` escape hatch consumes the masked
+        mean of every uplink plane."""
+        if self.server_fn is not None:
+            return self.uplink_planes
+        return tuple(dict.fromkeys(p.plane for p in self.fold))
+
+    # ------------------------------------------------------------------
     # generic interpreters (array-polymorphic: trees OR flat planes)
     # ------------------------------------------------------------------
     def direction(self, cfg, m, cst, x, x0, g):

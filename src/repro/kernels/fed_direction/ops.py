@@ -15,6 +15,15 @@ Statically-zero coefficients drop their stream entirely — FedCM at α = 1
 launches the same zero-aux kernel as FedAvg.  Specs with an escape-hatch
 ``direction_fn`` (non-affine directions) bypass the kernel: the callable
 is array-polymorphic and runs on the flat buffers directly.
+
+shard_map compatibility (cohort-parallel engine): this launch runs
+INSIDE ``shard_map`` over the ``"clients"`` mesh axis, vmapped over each
+device's local clients.  Every operand is either per-client ``(P,)``
+(x, g, the client-state row) or replicated ``(P,)`` broadcast state
+(x_t, Δ_t) — the full plane, never a shard — so the launch shapes are
+IDENTICAL at every shard width and the kernel needs no grid-stability
+floor (unlike ``server_update``, which launches on plane-column chunks);
+no collective ever enters the local-step loop.
 """
 from __future__ import annotations
 

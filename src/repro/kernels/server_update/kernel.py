@@ -105,7 +105,15 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
     C, n = deltas.shape
     m_dt = jnp.dtype(m_dtype) if m_dtype is not None else m.dtype
     rows = block_elems // LANE
-    padded = pl.cdiv(n, block_elems) * block_elems
+    # grid floor of 2: a single-step grid gets its loop collapsed and
+    # re-fused into the surrounding program, where XLA:CPU may contract
+    # the EMA's mul+add chains into FMAs differently per calling program —
+    # a 1-ulp divergence between e.g. the sharded (plane-column chunk) and
+    # unsharded launches of the SAME fold (measured; the cohort-parallel
+    # bitwise tests pin it).  A ≥2-step grid keeps the body an isolated,
+    # shape-stable loop computation; the extra block is pure padding.
+    nblocks = max(2, pl.cdiv(n, block_elems))
+    padded = nblocks * block_elems
     pad = padded - n
 
     def prep(a):
@@ -114,7 +122,6 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
 
     dr = jnp.pad(deltas, ((0, 0), (0, pad))).reshape(C, padded // LANE, LANE)
     wn_l = jnp.zeros((C, LANE), jnp.float32).at[:, 0].set(wn.astype(jnp.float32))
-    nblocks = padded // block_elems
 
     vec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
     plane = pl.BlockSpec((C, rows, LANE), lambda i: (0, i, 0))

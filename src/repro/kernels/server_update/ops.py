@@ -3,17 +3,49 @@
 ``fused_server_step`` launches one coefficient-row pass; ``fused_fold``
 executes ALL of an ``AlgorithmSpec``'s declarative fold rows
 (``repro.core.registry.FoldPass``) against the cohort's uplink planes —
-the registry-driven replacement for the old per-algorithm dispatch."""
+the registry-driven replacement for the old per-algorithm dispatch.
+
+``scatter_fold`` is the shard_map form of ``fused_fold`` for the
+cohort-parallel engine: called INSIDE a ``shard_map`` over the
+``"clients"`` mesh axis, it lowers the masked cohort mean to an explicit
+reduce-scatter (``all_to_all`` to plane-column shards + device-local
+full-cohort reduce — NOT ``psum_scatter``, whose per-device partial sums
+would re-associate the f32 reduction and break bitwise equality with the
+unsharded fold), runs the fold rows as kernel launches over each device's
+``(C, P/num_shards)`` column block, and ``all_gather``s the updated
+planes back to replicated form.
+
+Launches are shard_map-compatible by construction — each device launches
+on its LOCAL shapes — but interpret-mode bitwise stability across shard
+counts needs one extra care: ``_auto_block`` floors the block size so the
+grid loop keeps ≥ 2 steps whenever the plane allows it.  A single-step
+grid gets its loop collapsed and re-fused into the surrounding program,
+where XLA:CPU is free to contract the EMA's mul+add chains into FMAs
+differently per program — a 1-ulp divergence between the sharded and
+unsharded launches of the SAME math (measured); a real multi-step loop
+body compiles shape-identically on both."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.server_update.kernel import server_update_flat
+from repro.kernels.server_update.kernel import DEFAULT_BLOCK, LANE, server_update_flat
 
 # CPU container: interpret mode (executes the kernel body in python).
 # On a real TPU runtime set INTERPRET=False.
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def _auto_block(n: int, default: int = DEFAULT_BLOCK) -> int:
+    """Largest LANE-multiple block ≤ ``default`` giving a ≥ 2-step grid.
+
+    Keeps the interpret-mode grid loop a REAL loop for every plane length
+    that allows it (n > 2·LANE): the loop body then compiles as its own
+    shape-stable computation, and sharded / unsharded launches of the same
+    fold stay bitwise (see module docstring).  Sub-2·LANE planes keep the
+    single block — there is nothing to split."""
+    half = (n // (2 * LANE)) * LANE
+    return max(LANE, min(default, half)) if half else min(default, LANE)
 
 
 def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
@@ -27,6 +59,11 @@ def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
     (new_x, new_m, mean_delta) with mean_delta UNdiscounted; a statically
     dropped output (``write_x``/``write_m`` False) comes back ``None`` and
     costs no plane traffic.
+
+    Block size is ``_auto_block`` of the plane length, so the launch's
+    grid loop keeps ≥ 2 steps — the same fold launched on a plane-column
+    SHARD (cohort-parallel engine) then compiles bitwise-identically to
+    the full-plane launch.
     """
     coefs = jnp.stack([
         jnp.asarray(c_mm, jnp.float32),
@@ -36,6 +73,7 @@ def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
     ])
     return server_update_flat(
         deltas, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET,
+        block_elems=_auto_block(deltas.shape[-1]),
         write_x=write_x, write_m=write_m,
     )
 
@@ -90,3 +128,45 @@ def fused_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0):
         if adopt_m:
             m = new_m
     return x, m, mean_delta
+
+
+def scatter_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0,
+                 *, axis_name: str, n_shards: int):
+    """``fused_fold`` under cohort sharding — call INSIDE ``shard_map``.
+
+    ``planes`` maps plane names to the device-LOCAL ``(C/n_shards, P)``
+    shards of the cohort uplink (each device computed its own clients
+    end-to-end); ``wn`` is the full replicated ``(C,)`` mask/|S| row; ``x``
+    and ``m`` are the replicated ``(P,)`` server planes.  Three steps:
+
+    1. reduce-scatter, decomposed bitwise-safely: ``all_to_all`` turns
+       client-sharding into plane-column sharding — each device now holds
+       ``(C, P/n_shards)``, the COMPLETE cohort for its columns — so the
+       fold's masked reduce runs device-locally in exactly the unsharded
+       reduction order.  The D−1 rounds of latency the async ring gives
+       this collective are what hide it behind the next cohort's compute.
+    2. the spec's fold rows execute as ``fused_fold`` kernel launches over
+       the column block, updating each device's ``x``/``m`` chunk.
+    3. ``all_gather`` rebuilds the replicated ``(P,)`` planes (the next
+       round broadcasts them to every client anyway).
+
+    Returns ``(new_x, new_m, mean_delta)`` — replicated, ``mean_delta``
+    UNdiscounted, exactly ``fused_fold``'s contract.  The collective
+    decomposition lives in ``repro.core.flat`` (``cohort_to_columns`` /
+    ``plane_chunk`` / ``gather_plane``) — shared with the scattered-mean
+    path so the bitwise-load-bearing layout has one definition.
+    """
+    from repro.core.flat import cohort_to_columns, gather_plane, plane_chunk
+
+    Pn = x.shape[-1]
+    cols = {k: cohort_to_columns(v, axis_name, n_shards)
+            for k, v in planes.items() if k in spec.fold_planes}
+    new_x, new_m, mean = fused_fold(
+        spec, cfg, cols, wn, n_active,
+        plane_chunk(x, axis_name, n_shards),
+        plane_chunk(m, axis_name, n_shards),
+        eta_l, discount=discount,
+    )
+    return (gather_plane(new_x, axis_name, Pn),
+            gather_plane(new_m, axis_name, Pn),
+            gather_plane(mean, axis_name, Pn))

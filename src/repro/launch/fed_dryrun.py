@@ -91,12 +91,17 @@ def build_and_lower(
     # the flat engine concatenates every leaf into one (P,) buffer, which
     # for tensor-sharded ("model"-axis) leaves would force all-gathers of
     # the sharded dimensions — so only then fall back to the per-leaf tree
-    # path, and say so.
+    # path, and say so.  The fallback is PER-AXIS: losing the flat plane
+    # to "model"-sharded params does NOT surrender cohort parallelism —
+    # the tree path keeps the client axis sharded over "data" via the
+    # engine's cohort-axis sharding constraints (client_sharding below)
+    # plus the batch in_shardings.
     probe_specs = param_specs(p_sds, cfg, mesh)
     flat_fallback_reason = _tensor_sharded_reason(probe_specs)
     use_flat = flat_fallback_reason is None
     if not use_flat:
-        print(f"fed_dryrun: use_flat_plane=False ({flat_fallback_reason})")
+        print(f"fed_dryrun: use_flat_plane=False ({flat_fallback_reason}; "
+              f"cohort axis stays sharded over 'data')")
 
     fed = FedConfig(
         algo=algo, num_clients=4096, cohort_size=cohort, local_steps=local_steps,
@@ -105,7 +110,12 @@ def build_and_lower(
         aggregate_dtype=aggregate_dtype,
         use_flat_plane=use_flat,
     )
-    eng = FederatedEngine(fed, loss_fn)
+    eng = FederatedEngine(
+        fed, loss_fn,
+        # cohort-axis sharding survives the flat-plane fallback: pin the
+        # leading axis of every cohort-stacked array to the "data" axis
+        client_sharding=_ns(mesh, P("data")),
+    )
     eng.analysis_unroll = True
     pd = jnp.dtype(param_dtype)
     p_sds = jax.tree_util.tree_map(
@@ -196,6 +206,15 @@ def run(variant: str, *, algo="fedcm", cohort=16, local_steps=2,
         "param_dtype": param_dtype,
         "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
         "chips": n_chips(mesh),
+        # the RESOLVED mesh + which axis carries the cohort: the flat-plane
+        # fallback is per-axis (tensor-sharded params disable only the
+        # (P,) plane; cohort parallelism stays on "data")
+        "resolved_mesh": {
+            "axes": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        },
+        "cohort_axis": "data",
+        "cohort_parallelism": "gspmd-constraint",
         "use_flat_plane": fed.use_flat_plane,
         "flat_fallback_reason": flat_reason,
         "compile_seconds": round(t1 - t0, 2),

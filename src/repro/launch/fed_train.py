@@ -193,6 +193,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="FedACG-style per-round-of-staleness fold weight γ")
     ap.add_argument("--async", dest="async_pipeline", action="store_true",
                     help="force the async engine even at depth 1 / staleness 0")
+    ap.add_argument("--cohort-shard", type=int, default=0,
+                    help="shard the client axis over N devices (a "
+                         "('clients',) mesh; each device runs C/N clients "
+                         "end-to-end and the fold is a reduce-scatter). "
+                         "Requires --fused-kernel; 0 = single-device")
     ap.add_argument("--dryrun", action="store_true",
                     help="resolve + persist the config artifact and exit "
                          "without training")
@@ -212,6 +217,7 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
         use_flat_plane=args.flat_plane,
         pipeline_depth=args.pipeline_depth, staleness=args.staleness,
         staleness_discount=args.staleness_discount,
+        cohort_shard=args.cohort_shard,
     )
 
 
@@ -224,6 +230,7 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
     assert cfg.use_fused_kernel == args.fused_kernel
     assert cfg.pipeline_depth == args.pipeline_depth
     assert cfg.staleness == args.staleness
+    assert cfg.cohort_shard == args.cohort_shard
     payload = {
         "resolved_config": dataclasses.asdict(cfg),
         "engine_mode": (
@@ -233,6 +240,14 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
         ),
         "eval_every": args.eval_every,
         "dirichlet": args.dirichlet,
+        # the mesh the engine would build for cfg.cohort_shard — recorded
+        # so CI (which runs dryrun single-device AND multi-device) asserts
+        # the flag actually reaches the mesh constructor
+        "cohort_mesh": (
+            {"axes": ["clients"], "shape": [cfg.cohort_shard],
+             "devices_visible": len(jax.devices())}
+            if cfg.cohort_shard > 0 else None
+        ),
     }
     DRYRUN_ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
     DRYRUN_ARTIFACT.write_text(json.dumps(payload, indent=1))
@@ -250,6 +265,13 @@ def main(argv=None) -> int:
         ap.error("--per-round dispatches one round per jit call; the async "
                  "pipelined engine is a single fused program — drop one of "
                  "--per-round / --async / --pipeline-depth / --staleness")
+    if args.cohort_shard > 0 and not args.fused_kernel:
+        ap.error("--cohort-shard rides the flat+kernel path (clients emit "
+                 "(C, P) planes, the fold is the scattered server kernel) "
+                 "— add --fused-kernel")
+    if args.cohort_shard > 0 and not args.flat_plane:
+        ap.error("--cohort-shard shards the flat (C, P) uplink planes — "
+                 "drop --no-flat-plane")
     cfg = resolve_config(args)
     if args.dryrun:
         path = write_dryrun_artifact(cfg, args)

@@ -30,6 +30,27 @@ def make_test_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_cohort_mesh(n_shards: int = 0):
+    """1-D ``("clients",)`` mesh over the first ``n_shards`` devices — the
+    cohort-parallel engine's axis (each device owns C/n_shards clients
+    end-to-end).  ``n_shards=0`` takes every visible device.  Real
+    multi-host: initialize ``jax.distributed`` first and the same call
+    spans hosts; CI emulates with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_shards in (0, None) else n_shards
+    if n > len(devs):
+        raise ValueError(
+            f"cohort mesh wants {n} devices but only {len(devs)} are visible "
+            f"(emulate with XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return Mesh(np.asarray(devs[:n]), ("clients",))
+
+
 def n_chips(mesh) -> int:
     n = 1
     for s in mesh.shape.values():

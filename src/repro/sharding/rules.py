@@ -232,6 +232,48 @@ def _cache_shape(cfg: ModelConfig, shape: ShapeConfig):
 
 
 # ----------------------------------------------------------------------
+# cohort-parallel (client-axis) sharding
+# ----------------------------------------------------------------------
+
+#: the mesh axis the cohort-parallel engine shards clients over
+COHORT_AXIS = "clients"
+
+
+def cohort_axis_size(mesh) -> int:
+    """Validate a cohort mesh and return the ``"clients"`` axis size.
+
+    The cohort-parallel engine accepts any mesh that carries a
+    ``"clients"`` axis (a pure ``("clients",)`` mesh, or ``("clients",
+    "model")`` when each client's model is additionally tensor-sharded);
+    everything it shards — minibatches, gathered client states, uplink
+    planes — is partitioned over that one axis.
+    """
+    if COHORT_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"cohort-parallel engine needs a {COHORT_AXIS!r} mesh axis; "
+            f"got axes {mesh.axis_names} (build one with "
+            f"repro.launch.mesh.make_cohort_mesh)"
+        )
+    return mesh.shape[COHORT_AXIS]
+
+
+def padded_cohort(capacity: int, n_shards: int) -> int:
+    """Static padded cohort-axis length: ``capacity`` rounded up to a
+    multiple of the ``"clients"`` axis so ``shard_map`` splits evenly.
+    Pad rows carry zero fold weight (see ``repro.core.flat.pad_cohort``)."""
+    return -(-capacity // n_shards) * n_shards
+
+
+def cohort_uplink_specs(algo, extra: Tuple[str, ...] = ()) -> dict:
+    """PartitionSpec dict for a spec's cohort-stacked uplink planes: every
+    plane named by ``algo.uplink_planes`` (plus ``extra`` keys, e.g. the
+    per-client loss row) shards its leading axis over ``"clients"``.
+    Drives the shard_map in/out specs of the cohort-parallel engine —
+    derived from the registry flags, never from algorithm names."""
+    return {k: P(COHORT_AXIS) for k in (*algo.uplink_planes, *extra)}
+
+
+# ----------------------------------------------------------------------
 # federated state
 # ----------------------------------------------------------------------
 

@@ -147,6 +147,50 @@ def test_mimelite_momentum_from_full_batch_grads():
     np.testing.assert_allclose(np.asarray(new.server.momentum["x"]), expect_m, rtol=1e-5)
 
 
+def test_fedprox_k1_equals_fedavg():
+    """K=1 from the anchor: x = x_t ⇒ the proximal term μ(x − x_t) is zero
+    on the first local step, so a single-step FedProx round IS FedAvg."""
+    params = {"x": jnp.array([1.0, -2.0])}
+    centers = jnp.array([[0.0, 0.0], [2.0, 2.0], [1.0, 1.0], [-1.0, 3.0]])
+    _, _, prox, _ = _run_round("fedprox", params, centers, K=1, fedprox_mu=0.3)
+    _, _, avg, _ = _run_round("fedavg", params, centers, K=1)
+    np.testing.assert_allclose(np.asarray(prox.params["x"]),
+                               np.asarray(avg.params["x"]), rtol=1e-6)
+
+
+def test_fedprox_two_step_hand_math():
+    """K=2 hand-rolled: step 1 leaves x₁ = x₀ − η·g₁ (prox term zero);
+    step 2 descends v = g₂ + μ(x₁ − x₀), so the proximal pull shows up as
+    exactly −η·μ·(x₁ − x₀) relative to plain SGD.  On the quadratic
+    f_i = ½‖x − c_i‖²: g = x − c_i."""
+    x0 = np.array([1.0, -2.0])
+    centers = np.array([[0.0, 0.0], [2.0, 2.0], [1.0, 1.0], [-1.0, 3.0]])
+    mu, eta, eta_g = 0.3, 0.1, 1.0
+    params = {"x": jnp.asarray(x0)}
+    cfg, old, new, _ = _run_round("fedprox", params, jnp.asarray(centers),
+                                  K=2, fedprox_mu=mu)
+    deltas = []
+    for c in centers:
+        x1 = x0 - eta * (x0 - c)                       # prox term zero at x₀
+        v2 = (x1 - c) + mu * (x1 - x0)                 # g₂ + μ·(x − x_t)
+        x2 = x1 - eta * v2
+        deltas.append(x2 - x0)
+    expect = x0 + eta_g * np.mean(deltas, axis=0)      # x⁺ = x + η_g·mean(Δ)
+    np.testing.assert_allclose(np.asarray(new.params["x"]), expect, rtol=1e-6)
+
+
+def test_fedprox_mu_shrinks_client_drift():
+    """Larger μ pulls the local iterates toward the anchor: the cohort-mean
+    delta norm must shrink monotonically in μ on heterogeneous clients."""
+    params = {"x": jnp.array([1.0, -2.0])}
+    centers = jnp.array([[0.0, 0.0], [4.0, 4.0], [2.0, -2.0], [-3.0, 3.0]])
+    norms = []
+    for mu in (0.0, 0.5, 2.0):
+        _, _, _, m = _run_round("fedprox", params, centers, K=8, fedprox_mu=mu)
+        norms.append(float(m.delta_norm))
+    assert norms[0] > norms[1] > norms[2], norms
+
+
 def test_all_algorithms_descend_on_convex():
     params = {"x": jnp.array([6.0, -6.0])}
     centers = jnp.array([[1.0, 0.0], [0.0, 1.0], [-1.0, 0.0], [0.0, -1.0]])

@@ -42,6 +42,36 @@ def test_fused_kernel_flag_wires_through():
     assert _resolved(["--fused-kernel"]).use_fused_kernel is True
 
 
+def test_cohort_shard_flag_wires_through():
+    assert _resolved([]).cohort_shard == 0
+    cfg = _resolved(["--cohort-shard", "4", "--fused-kernel"])
+    assert cfg.cohort_shard == 4 and cfg.use_fused_kernel is True
+
+
+def test_cohort_shard_requires_kernel_and_flat_plane():
+    with pytest.raises(SystemExit):  # argparse error: needs --fused-kernel
+        main(["--dryrun", "--cohort-shard", "2"])
+    with pytest.raises(SystemExit):  # and the flat plane
+        main(["--dryrun", "--cohort-shard", "2", "--fused-kernel",
+              "--no-flat-plane"])
+
+
+def test_cohort_shard_dryrun_records_mesh(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    rc = main(["--dryrun", "--cohort-shard", "2", "--fused-kernel"])
+    assert rc == 0
+    got = json.loads(art.read_text())
+    assert got["resolved_config"]["cohort_shard"] == 2
+    assert got["cohort_mesh"] == {
+        "axes": ["clients"], "shape": [2],
+        "devices_visible": got["cohort_mesh"]["devices_visible"],
+    }
+    # no --cohort-shard → no mesh recorded
+    rc = main(["--dryrun"])
+    assert json.loads(art.read_text())["cohort_mesh"] is None
+
+
 def test_dryrun_artifact_records_resolved_config(tmp_path, monkeypatch):
     art = tmp_path / "fed_train_dryrun.json"
     monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
