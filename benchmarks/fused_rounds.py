@@ -79,6 +79,11 @@ ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "fused_rounds.json"
 #: device process: benchmarks/cohort_sharded.py sets XLA_FLAGS pre-import);
 #: when present it is folded into the trajectory summary below
 COHORT_ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "cohort_sharded.json"
+#: the participation scenario harness (host-store population engine) also
+#: writes a rev-stamped artifact; folded into the trajectory when current
+PARTICIPATION_ARTIFACT = (
+    Path(__file__).resolve().parent / "artifacts" / "participation_robustness.json"
+)
 #: top-level per-PR perf trajectory: rounds/s per workload, one entry per
 #: commit — the diffable history CI uploads (and the repo carries)
 BENCH_SUMMARY = Path(__file__).resolve().parents[1] / "BENCH_fused_rounds.json"
@@ -319,6 +324,20 @@ def write_trajectory_summary(result: dict) -> dict:
                     }
         else:
             entry["cohort_sharded"] = {"stale_rev": cs.get("rev")}
+    if PARTICIPATION_ARTIFACT.exists():
+        pr = json.loads(PARTICIPATION_ARTIFACT.read_text())
+        if isinstance(pr, dict) and pr.get("rev") == entry["rev"]:
+            # per-(N, regime, algo) accuracy + rounds/s of the host-store
+            # population engine — the scenario harness's headline numbers
+            entry["participation"] = [
+                {k: row[k] for k in ("num_clients", "availability", "algo",
+                                     "acc_final", "rounds_per_s")}
+                for row in pr.get("rows", [])
+            ]
+        else:
+            entry["participation"] = {
+                "stale_rev": pr.get("rev") if isinstance(pr, dict) else "pre-harness"
+            }
     data = {"trajectory": []}
     if BENCH_SUMMARY.exists():
         try:

@@ -1,47 +1,131 @@
-"""Participation-rate sweep (the paper's §6.2 robustness claim, sharpened).
+"""Participation-robustness scenario harness (paper §6.2 at fleet scale).
 
-Sweeps the cohort size at fixed N=500 and measures how each algorithm's
-final accuracy and stability degrade as participation → 0.6%.  FedCM's
-momentum carries gradient information of past cohorts, so its degradation
-curve should be the flattest; SCAFFOLD's stale control variates should
-degrade it fastest (what the paper observed going 10% → 2%).
+The original sweep shrank the cohort at N=500 resident clients.  This
+harness instead holds participation fixed and scales the POPULATION —
+N = 1e3 / 1e5 (and 1e6 with ``--full``) — under realistic availability
+regimes, exercising the out-of-core population engine end to end:
+``population_store="host"`` (sparse host store of client state, gathered
+``(C, P)`` per cohort) + ``StreamingClientData`` (shards regenerate on
+demand; nothing O(N) ever lands on device).
+
+Regimes (≥3, per the availability processes in ``repro.data.population``):
+
+  uniform   — legacy bernoulli participation (bitwise-preserved sampler)
+  zipf      — traffic skew w_i ∝ (i+1)^-1.1 (head clients dominate)
+  diurnal   — time-of-day sinusoid, amplitude 0.8, phase spread over clients
+  dropout   — uniform draw, then 30% straggler dropout from the mask
+
+Per row: final test accuracy, steady-state rounds/s (one warm-up round
+excluded — it carries the jit compile), mean active clients, rounds that
+hit the bernoulli capacity clip (surfaced via ``RoundMetrics.n_clipped``),
+and how many distinct clients the host store touched.
+
+The artifact is rev-stamped; ``benchmarks/fused_rounds.py`` folds the rows
+into the top-level ``BENCH_fused_rounds.json`` trajectory summary when the
+revs match.
+
+    PYTHONPATH=src python -m benchmarks.participation_robustness \
+        [--rounds 30] [--full]
 """
 from __future__ import annotations
 
 import argparse
+import time
 
-from benchmarks.common import Setting, print_table, run_one, save_artifact
+import numpy as np
 
-COHORTS = [25, 10, 3]
-ALGOS = ["fedcm", "fedavg", "scaffold"]
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import git_rev, print_table, save_artifact
+from repro.configs.base import FedConfig
+from repro.core import FederatedEngine, make_eval_fn
+from repro.data import StreamingClientData
+from repro.models.small import classification_loss, mlp_classifier
+
+N_SWEEP = [1_000, 100_000]
+N_FULL = 1_000_000
+ALGOS = ["fedcm", "scaffold"]  # stateless + stateful (store-backed c_i)
+
+REGIMES = [
+    {"name": "uniform", "availability": "uniform", "dropout_rate": 0.0},
+    {"name": "zipf-1.1", "availability": "zipf", "dropout_rate": 0.0,
+     "zipf_exponent": 1.1},
+    {"name": "diurnal-0.8", "availability": "diurnal", "dropout_rate": 0.0},
+    {"name": "dropout-0.3", "availability": "uniform", "dropout_rate": 0.3},
+]
+
+DIM, N_CLASSES, HIDDEN = 32, 10, 64
+COHORT, LOCAL_STEPS, BATCH = 20, 5, 20
 
 
-def main(rounds: int = 150, seeds: int = 2) -> list:
-    import numpy as np
+def run_scenario(algo: str, num_clients: int, regime: dict, rounds: int,
+                 seed: int = 0) -> dict:
+    cfg = FedConfig(
+        algo=algo, num_clients=num_clients, cohort_size=COHORT,
+        local_steps=LOCAL_STEPS, alpha=0.1, eta_l=0.05, eta_g=1.0,
+        participation="bernoulli", rounds=rounds, seed=seed,
+        population_store="host",
+        availability=regime["availability"],
+        dropout_rate=regime["dropout_rate"],
+        zipf_exponent=regime.get("zipf_exponent", 1.1),
+    )
+    task = StreamingClientData(num_clients, dim=DIM, n_classes=N_CLASSES,
+                               seed=seed)
+    model = mlp_classifier((DIM, HIDDEN, HIDDEN, N_CLASSES))
+    eng = FederatedEngine(cfg, classification_loss(model.apply),
+                          batch_size=BATCH)
+    state = eng.init(model.init(jax.random.PRNGKey(seed)),
+                     jax.random.PRNGKey(seed + 1))
+    # warm-up round carries the per-round jit compiles — excluded from rate
+    state, _ = eng.run_rounds(state, task, 1)
+    t0 = time.time()
+    state, ms = eng.run_rounds(state, task, rounds)
+    dt = time.time() - t0
+    evaluate = make_eval_fn(model.apply)
+    x_te, y_te = task.test_set(2_000)
+    acc = evaluate(state.params, jnp.asarray(x_te), jnp.asarray(y_te))
+    n_clipped = np.asarray(ms.n_clipped)
+    return {
+        "num_clients": num_clients,
+        "availability": regime["name"],
+        "algo": algo,
+        "acc_final": round(float(acc), 4),
+        "rounds_per_s": round(rounds / dt, 2),
+        "mean_active": round(float(np.mean(np.asarray(ms.n_active))), 2),
+        "clip_rounds": int(np.sum(n_clipped > 0)),
+        "touched_clients": (eng.population.touched
+                            if eng.population is not None else 0),
+    }
 
+
+def main(rounds: int = 30, full: bool = False, seed: int = 0) -> list:
+    sweep = N_SWEEP + ([N_FULL] if full else [])
     rows = []
-    for cohort in COHORTS:
-        setting = Setting(f"500 clients, {cohort/5:.1f}%", 500, cohort, 50)
-        for algo in ALGOS:
-            per_seed = [run_one(algo, setting, 0.3, rounds, seed=s) for s in range(seeds)]
-            row = {
-                "cohort": cohort,
-                "participation": f"{cohort/5:.1f}%",
-                "algo": algo,
-                "acc_final": round(float(np.mean([r["acc_final"] for r in per_seed])), 4),
-                "acc_std": round(float(np.mean([r["acc_std"] for r in per_seed])), 4),
-            }
-            rows.append(row)
-            print(f"  cohort={cohort:<3} {algo:9s} final={row['acc_final']:.4f} ±{row['acc_std']:.4f}")
-    save_artifact("participation_robustness", rows)
-    print_table("Participation sweep (500 clients, Dir-0.3)", rows,
-                ["participation", "algo", "acc_final", "acc_std"])
+    for n in sweep:
+        for regime in REGIMES:
+            for algo in ALGOS:
+                row = run_scenario(algo, n, regime, rounds, seed=seed)
+                rows.append(row)
+                print(f"  N={n:<8} {regime['name']:<12} {algo:9s} "
+                      f"acc={row['acc_final']:.4f} "
+                      f"{row['rounds_per_s']:6.2f} rounds/s "
+                      f"active={row['mean_active']:5.1f} "
+                      f"clips={row['clip_rounds']} "
+                      f"touched={row['touched_clients']}")
+    save_artifact("participation_robustness", {"rev": git_rev(), "rows": rows})
+    print_table("Participation scenarios (host store, streaming shards)",
+                rows, ["num_clients", "availability", "algo", "acc_final",
+                       "rounds_per_s", "mean_active", "clip_rounds",
+                       "touched_clients"])
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=150)
-    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--full", action="store_true",
+                    help="add the N=1e6 tier to the sweep")
+    ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
-    main(a.rounds, a.seeds)
+    main(a.rounds, a.full, a.seed)

@@ -86,6 +86,34 @@ def load_checkpoint(directory: str, step: Optional[int], like: Any) -> Tuple[Any
     return tree, meta
 
 
+def load_flat(directory: str, step: Optional[int] = None) -> Tuple[Dict[str, Any], Dict]:
+    """Template-FREE restore: the raw ``{path: array}`` map plus meta.
+
+    ``load_checkpoint`` needs a template pytree with the exact stored
+    shapes — fine for params/server planes, impossible for a population
+    store's ``{"ids": (M,), "rows": (M, P)}`` packing whose M (touched
+    clients) is run-dependent.  This variant reconstructs every leaf from
+    its stored dtype/shape instead; callers rebuild structure themselves
+    (``HostPopulationStore.from_pytree`` consumes it directly)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    fname = os.path.join(directory, f"step_{step}.msgpack")
+    with open(fname, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+    out: Dict[str, Any] = {}
+    for key, entry in payload.items():
+        if entry["dtype"] == _BF16:
+            arr = np.frombuffer(entry["data"], dtype=np.uint16).reshape(entry["shape"])
+            out[key] = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(entry["data"], dtype=np.dtype(entry["dtype"]))
+            out[key] = jnp.asarray(arr.reshape(entry["shape"]))
+    return out, meta
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

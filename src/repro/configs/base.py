@@ -256,6 +256,34 @@ class FedConfig:
     # Requires use_flat_plane + use_fused_kernel.  An explicit mesh can
     # instead be passed as FederatedEngine(..., cohort_mesh=...).
     cohort_shard: int = 0
+    # ---- population store / streaming availability (million-client axis) --
+    # Where per-client state planes (scaffold c_i, feddyn λ_i) live:
+    #   "resident" — the stacked (N, P) device plane (the bitwise oracle),
+    #   "host"     — a sparse host-memory store (repro.data.population);
+    #                the engine gathers a (C, P) block on participation and
+    #                scatters updated rows back after the fold, so device
+    #                memory scales with the COHORT and host memory with the
+    #                set of touched clients, never with N.  N=1e6 becomes a
+    #                literal config value.  Requires use_flat_plane.
+    population_store: str = "resident"
+    # availability process driving the streaming cohort sampler:
+    #   "uniform" — every client equally likely (the legacy draw, kept
+    #               bitwise-identical to the pre-store sampler),
+    #   "zipf"    — traffic skew w_i ∝ (i+1)^-zipf_exponent,
+    #   "diurnal" — time-of-day sinusoid over the round counter; client i
+    #               peaks at phase i/N of a diurnal_period-round "day".
+    availability: str = "uniform"
+    zipf_exponent: float = 1.1
+    diurnal_period: float = 24.0  # rounds per simulated day
+    diurnal_amplitude: float = 0.8  # 0 = uniform, →1 = full day/night swing
+    # straggler model: each SELECTED client independently drops out of the
+    # round with this probability (mask-only thinning after selection; a
+    # fully-dropped cohort keeps its first client so n_active ≥ 1).
+    dropout_rate: float = 0.0
+    # bernoulli cohort capacity = mean + σ·sd tail bound.  5σ makes the
+    # static pad overflow ~never (p < 3e-7); either way an overflow is now
+    # COUNTED in RoundMetrics.n_clipped instead of silently truncated.
+    bernoulli_capacity_sigma: float = 5.0
 
 
 @dataclass(frozen=True)

@@ -30,6 +30,7 @@ from repro.core.engine import (
     local_learning_rate,
     make_eval_fn,
     sample_cohort,
+    sample_cohort_ex,
 )
 from repro.core.flat import CohortUplink, FlatSpec, LeafSpec, ring_push
 from repro.core.registry import (
@@ -76,4 +77,5 @@ __all__ = [
     "local_learning_rate",
     "make_eval_fn",
     "sample_cohort",
+    "sample_cohort_ex",
 ]

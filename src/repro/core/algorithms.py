@@ -23,7 +23,11 @@ Statelessness matters: FedCM/FedAvg/FedAdam/MimeLite/FedAvgM/FedACG keep
 NO per-client state; SCAFFOLD and FedDyn keep per-client control variates,
 which is exactly what the paper blames for their degradation at 2%
 participation — the engine stores them stacked ``(N, …)`` and leaves
-non-participants stale, reproducing that failure mode honestly.
+non-participants stale, reproducing that failure mode honestly.  At fleet
+scale (``cfg.population_store="host"``) the same planes live out-of-core
+in ``repro.data.population.HostPopulationStore`` instead —
+``client_state_init`` returns None and the engine gathers/scatters
+``(C, P)`` cohort rows per round, bitwise-matching the resident plane.
 
 Flat fast path: every spec interpreter is *array-polymorphic* — a bare jax
 array is a single-leaf pytree, so ``spec.direction``/``spec.server_update``

@@ -20,6 +20,32 @@ Participation models (§6.1 of the paper):
   jit-static shape we draw the cohort count s ~ Binomial(N, p) (clipped to a
   capacity), take the first s entries of a random permutation, and mask the
   rest; conditioned on s this equals independent-Bernoulli participation.
+  The capacity is a mean + ``cfg.bernoulli_capacity_sigma``·sd tail bound;
+  rounds whose draw exceeds it are CLIPPED to capacity and the overflow
+  count is surfaced as ``RoundMetrics.n_clipped`` (never silently dropped).
+
+Streaming availability sampler (``sample_cohort_ex``): selection is driven
+by a pluggable availability process on ``FedConfig`` —
+``repro.data.population.availability_log_weights`` maps ``cfg.availability``
+("uniform" | "zipf" | "diurnal") to per-client log weights, non-uniform
+draws go through Gumbel top-k without replacement, ``bernoulli``
+participation thins by per-client inclusion probabilities, and
+``cfg.dropout_rate`` models stragglers by mask-only thinning AFTER
+selection.  The uniform process keeps the legacy two-key draw
+bitwise-identical, so pre-existing trajectories are unchanged.
+
+Population store (``cfg.population_store``): per-client state planes
+(scaffold c_i, feddyn λ_i) either live as the stacked ``(N, P)`` device
+plane ("resident" — the bitwise oracle) or in a sparse host-memory
+``repro.data.population.HostPopulationStore`` ("host").  The host path
+runs ``run_rounds_store`` / ``run_rounds_store_async``: a host loop around
+the SAME jitted round pieces, with a pure ``(C, P)`` gather-on-participation
+before each round step and a scatter-on-fold after — device memory scales
+with the cohort, host memory with the touched-client set, and N=1e6 is a
+literal config value.  Store-backed rounds are f32-BITWISE against the
+resident engine at matched cohorts (tests/test_population.py): the round
+math is the same code, parameterized by ``cohort_rows``/``emit_rows``
+instead of the resident plane.
 
 Payload accounting mirrors §4.2: FedCM doubles only the DOWNLINK (x_t plus
 Δ_t); uplink is one delta — unchanged from FedAvg.  SCAFFOLD pays both ways
@@ -143,6 +169,11 @@ from repro.core.flat import (
     ring_push,
 )
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
+from repro.data.population import (
+    POPULATION_STORES,
+    availability_log_weights,
+    make_population_store,
+)
 from repro.kernels.fed_direction.ops import flat_direction_step
 from repro.kernels.server_update.ops import fused_fold, scatter_fold
 from repro.sharding.rules import (
@@ -204,6 +235,9 @@ class RoundMetrics(NamedTuple):
     eta_l: jax.Array
     bytes_down: jax.Array  # server→clients this round (f32 elements × 4)
     bytes_up: jax.Array  # clients→server this round
+    # bernoulli draws beyond the static cohort capacity this round (clipped
+    # clients sat out; 0 under "fixed" and at the default 5σ capacity)
+    n_clipped: jax.Array = None
 
 
 class AsyncRoundMetrics(NamedTuple):
@@ -222,30 +256,83 @@ class AsyncRoundMetrics(NamedTuple):
     bytes_up: jax.Array
     folded: jax.Array  # 0/1: did this round fold a completed cohort
     eval_acc: jax.Array  # in-scan eval accuracy, −1.0 when not evaluated
+    n_clipped: jax.Array = None  # capacity-overflow clips of the LAUNCHED cohort
 
 
 def cohort_capacity(cfg: FedConfig) -> int:
     """Static cohort axis length. ``fixed``: exactly S. ``bernoulli``: a
-    Binomial(N, p) tail bound — mean + 5σ, clipped to N (p(overflow) < 3e-7;
-    overflow clips the round's cohort, a negligible bias at these sizes)."""
+    Binomial(N, p) tail bound — mean + ``cfg.bernoulli_capacity_sigma``·σ,
+    clipped to N.  At the default 5σ, p(overflow) < 3e-7; an overflow clips
+    the round's cohort and is COUNTED in ``RoundMetrics.n_clipped`` (the
+    pre-store engine truncated silently — the bias the clip metric and its
+    regression test now pin)."""
     if cfg.participation == "fixed":
         return cfg.cohort_size
     p = cfg.cohort_size / cfg.num_clients
     sd = math.sqrt(cfg.num_clients * p * (1 - p))
-    return min(cfg.num_clients, int(math.ceil(cfg.cohort_size + 5 * sd)))
+    sigma = float(getattr(cfg, "bernoulli_capacity_sigma", 5.0))
+    return min(cfg.num_clients, int(math.ceil(cfg.cohort_size + sigma * sd)))
 
 
-def sample_cohort(rng, cfg: FedConfig) -> Tuple[jax.Array, jax.Array]:
-    """Returns (client_ids (C,), active_mask (C,)) with C = cohort_capacity."""
+def sample_cohort_ex(rng, cfg: FedConfig, t=None):
+    """Streaming availability sampler.  Returns
+    ``(client_ids (C,), active_mask (C,), n_clipped ())`` with
+    C = cohort_capacity and ``n_clipped`` the number of bernoulli draws
+    beyond capacity this round (those clients sit the round out).
+
+    Selection is driven by ``cfg.availability``
+    (``repro.data.population.availability_log_weights``): uniform keeps the
+    legacy two-key draw BITWISE (same splits, same ``jax.random.choice`` /
+    scalar-p bernoulli branch — pre-existing trajectories are unchanged);
+    non-uniform processes select via Gumbel top-k without replacement and
+    thin by per-client inclusion probabilities ``clip(S·softmax(logw), 0, 1)``
+    under ``participation="bernoulli"``.  ``cfg.dropout_rate`` then drops
+    each selected client independently (straggler model) — mask-only, after
+    selection, keeping ≥1 active client.  ``t`` is the round counter (may be
+    traced; only the diurnal process reads it)."""
     cap = cohort_capacity(cfg)
-    k_perm, k_n = jax.random.split(rng)
-    ids = jax.random.choice(k_perm, cfg.num_clients, (cap,), replace=False)
+    dropout = float(getattr(cfg, "dropout_rate", 0.0))
+    if dropout > 0.0:
+        k_perm, k_n, k_drop = jax.random.split(rng, 3)
+    else:  # legacy split — keeps dropout-free trajectories bitwise
+        k_perm, k_n = jax.random.split(rng)
+        k_drop = None
+    logw = availability_log_weights(cfg, t)
+    if logw is None:  # uniform: the legacy draw, verbatim
+        ids = jax.random.choice(k_perm, cfg.num_clients, (cap,), replace=False)
+    else:
+        # Gumbel top-k = weighted sampling without replacement
+        g = jax.random.gumbel(k_perm, (cfg.num_clients,), dtype=jnp.float32)
+        _, ids = jax.lax.top_k(logw + g, cap)
+        ids = ids.astype(jnp.int32)
+    n_clipped = jnp.int32(0)
     if cfg.participation == "fixed":
-        return ids, jnp.ones((cap,), bool)
-    p = cfg.cohort_size / cfg.num_clients
-    draws = jax.random.bernoulli(k_n, p, (cfg.num_clients,))
-    s = jnp.clip(jnp.sum(draws).astype(jnp.int32), 1, cap)
-    return ids, jnp.arange(cap) < s
+        mask = jnp.ones((cap,), bool)
+    else:
+        if logw is None:
+            p = cfg.cohort_size / cfg.num_clients
+            draws = jax.random.bernoulli(k_n, p, (cfg.num_clients,))
+        else:
+            q = jnp.clip(cfg.cohort_size * jax.nn.softmax(logw), 0.0, 1.0)
+            draws = jax.random.bernoulli(k_n, q)
+        s_raw = jnp.sum(draws).astype(jnp.int32)
+        s = jnp.clip(s_raw, 1, cap)
+        mask = jnp.arange(cap) < s
+        n_clipped = jnp.maximum(s_raw - cap, 0)
+    if dropout > 0.0:
+        keep = jax.random.bernoulli(k_drop, 1.0 - dropout, (cap,))
+        kept = mask & keep
+        # an all-dropped cohort would make the fold 0/0 — keep one client
+        first = mask & (jnp.arange(cap) == jnp.argmax(mask))
+        mask = jnp.where(jnp.any(kept), kept, first)
+    return ids, mask, n_clipped
+
+
+def sample_cohort(rng, cfg: FedConfig, t=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (client_ids (C,), active_mask (C,)) with C = cohort_capacity.
+    Back-compat wrapper over ``sample_cohort_ex`` (drops the clip count)."""
+    ids, mask, _ = sample_cohort_ex(rng, cfg, t)
+    return ids, mask
 
 
 def local_learning_rate(cfg: FedConfig, t) -> jax.Array:
@@ -418,6 +505,33 @@ class FederatedEngine:
         self.batch_size = batch_size
         self.client_sharding = client_sharding
         self.analysis_unroll = False  # dry-run analysis form
+        # ---- population store (out-of-core client state) ----
+        # "host" keeps per-client state rows in a sparse host store
+        # (repro.data.population.HostPopulationStore, created by init());
+        # the engine host-loops the SAME jitted round pieces with a (C, P)
+        # gather before each step and a scatter after each fold.
+        store = getattr(cfg, "population_store", "resident")
+        if store not in POPULATION_STORES:
+            raise ValueError(
+                f"unknown population_store {store!r}; known: {POPULATION_STORES}"
+            )
+        self.population_store = store
+        self.population = None  # HostPopulationStore, attached by init()
+        # fail at construction, not at the first sampled round
+        availability_log_weights(cfg, t=0)
+        if store == "host":
+            if not cfg.use_flat_plane:
+                raise ValueError(
+                    "population_store='host' rides the flat parameter plane "
+                    "(the store gathers/scatters contiguous (C, P) rows) — "
+                    "set cfg.use_flat_plane=True"
+                )
+            if cohort_mesh is not None or getattr(cfg, "cohort_shard", 0) > 0:
+                raise ValueError(
+                    "population_store='host' is host-loop execution and is "
+                    "not composable with cohort-parallel shard_map — drop "
+                    "cohort_mesh / set cfg.cohort_shard=0"
+                )
         # ---- cohort-parallel (SPMD-over-clients) execution path ----
         # a Mesh with a "clients" axis turns every cohort phase into
         # shard_map over that axis: each device owns C/num_shards clients
@@ -486,7 +600,16 @@ class FederatedEngine:
         """Allocate the FedState the registered spec requires: the stacked
         per-client planes iff ``needs_client_state``, the second-moment
         plane iff ``needs_second_moment`` — allocation is derived from the
-        spec's state-plane flags, never from algorithm names."""
+        spec's state-plane flags, never from algorithm names.
+
+        Under ``population_store="host"`` the per-client planes never
+        touch the device: ``client_state_init`` returns None and a fresh
+        ``HostPopulationStore`` is attached as ``self.population``
+        (re-``init`` = a fresh population)."""
+        if self.population_store != "resident" and self.algo.needs_client_state:
+            self.population = make_population_store(
+                self.cfg, FlatSpec.from_tree(params).size
+            )
         state = FedState(
             params=params,
             server=server_init(params, self.cfg.momentum_dtype,
@@ -528,15 +651,16 @@ class FederatedEngine:
     def _payload_from_nbytes(self, P: int) -> Dict[str, int]:
         """Payload accounting from a total byte count — the flat path charges
         ``FlatSpec.nbytes`` (the wire dtypes), identical to ``tree_bytes``.
-        Wire shapes are DERIVED from the spec's state-plane flags (§4.2)."""
+        Wire shapes are DERIVED from the spec's state-plane flags (§4.2) via
+        ``AlgorithmSpec.wire_uplink_planes`` — the same accounting
+        ``fed_train --list-algos`` prints per algorithm."""
         down = P  # x_t always goes down
-        up = P  # Δ_i always goes up
         if self.algo.needs_momentum_broadcast:
             down += P  # Δ_t (fedcm/mimelite) or c (scaffold)
-        if self.algo.client_state_uplink:
-            up += P  # SCAFFOLD Δc_i — feddyn's λ_i never leaves the client
-        if self.algo.needs_full_grad:
-            up += P  # MimeLite full-batch gradient
+        # Δ_i always; +Δc_i iff the state plane goes over the wire
+        # (SCAFFOLD — feddyn's λ_i never leaves the client); +full-batch
+        # gradient iff needs_full_grad (MimeLite)
+        up = P * len(self.algo.wire_uplink_planes)
         return {"down_per_client": down, "up_per_client": up}
 
     # -------------------------------------------------- cohort sharding
@@ -611,7 +735,8 @@ class FederatedEngine:
         return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng, master)
 
     def _flat_cohort_pass(self, fstate: FedState, batches, ids, mask,
-                          full_batches, spec: FlatSpec, m_t, eta_l):
+                          full_batches, spec: FlatSpec, m_t, eta_l,
+                          cohort_rows=None):
         """The cohort's client phase on the flat plane: gather per-client
         state, vmap the K-local-step update over the cohort.  Shared
         VERBATIM by the sync round (``_flat_round_step``) and the async
@@ -619,8 +744,14 @@ class FederatedEngine:
         the clients descend against (the CURRENT momentum for sync, an
         S-rounds-stale one for the pipelined path).
 
-        Returns (outs, losses, cohort_cst) where cohort_cst is the (C, P)
-        gathered client-state plane on the kernel path (None otherwise)."""
+        ``cohort_rows`` (store-backed path) is a pre-gathered ``(C, P)``
+        f32 block from the population store, replacing the resident-plane
+        gather; the per-client math downstream is identical either way.
+
+        Returns (outs, losses, cohort_cst, cohort_cst_tree): cohort_cst is
+        the (C, P) gathered client-state plane on the kernel path,
+        cohort_cst_tree its leaf-form counterpart on the jnp path (None
+        where unused)."""
         cfg, algo = self.cfg, self.algo
         batches = self._constrain_cohort(batches)
 
@@ -633,7 +764,16 @@ class FederatedEngine:
 
         cohort_cst = cohort_cst_tree = None
         if algo.needs_client_state:
-            if cfg.use_fused_kernel:  # (N, P) plane: ONE gather
+            if cohort_rows is not None:  # store-backed: rows came from host
+                if cfg.use_fused_kernel:
+                    cohort_cst = self._constrain_cohort(cohort_rows)
+                else:  # leaf form, as the local steps consume it — the
+                    # unravel restores leaf dtypes, matching the resident
+                    # per-leaf gather bitwise (rows are exact f32 ravels)
+                    cohort_cst_tree = self._constrain_cohort(
+                        spec.unravel(cohort_rows)
+                    )
+            elif cfg.use_fused_kernel:  # (N, P) plane: ONE gather
                 cohort_cst = self._constrain_cohort(fstate.client_states[ids])
             else:  # leaf form, as the local steps consume it
                 cohort_cst_tree = self._constrain_cohort(
@@ -651,7 +791,7 @@ class FederatedEngine:
             )
 
         outs, losses = jax.vmap(one_client)(cohort_cst_tree, cohort_cst, batches, full)
-        return outs, losses, cohort_cst
+        return outs, losses, cohort_cst, cohort_cst_tree
 
     # -------------------------------------------------- cohort-parallel
     @property
@@ -737,7 +877,7 @@ class FederatedEngine:
         losses = jax.lax.with_sharding_constraint(
             out["losses"], NamedSharding(self.cohort_mesh, P())
         )
-        return outs, losses, cohort_cst
+        return outs, losses, cohort_cst, None
 
     def _sharded_round_close(self, algo, fsrv, outs, wp, n_active, x_t, eta_l,
                              discount=1.0):
@@ -837,20 +977,33 @@ class FederatedEngine:
         )
 
     def _flat_round_step(self, fstate: FedState, batches, ids, mask,
-                         full_batches, spec: FlatSpec):
+                         full_batches, spec: FlatSpec, n_clipped=None,
+                         cohort_rows=None, emit_rows=False):
         """One round entirely on the flat plane: (P,) carry through the
         local-step scan, (C, P) cohort planes through aggregation, (N, P)
         client-state scatter.  Same math as ``_tree_round_step`` — the
-        equivalence tests in tests/test_flat.py hold the two bitwise-close."""
+        equivalence tests in tests/test_flat.py hold the two bitwise-close.
+
+        Store-backed execution (``population_store="host"``) reuses this
+        step verbatim: ``cohort_rows`` replaces the resident-plane gather
+        and ``emit_rows=True`` (static) swaps the ``(N, P)`` scatter for
+        returning the updated ``(C, P)`` rows as a third output — the host
+        loop writes them back to the store."""
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, fstate.server.round)
         x_t = fstate.params  # (P,) f32
         m_t = fstate.server.momentum  # (P,) momentum_dtype
-        cohort_pass = (self._sharded_cohort_pass if self._sharded
-                       else self._flat_cohort_pass)
-        outs, losses, cohort_cst = cohort_pass(
-            fstate, batches, ids, mask, full_batches, spec, m_t, eta_l
-        )
+        if cohort_rows is not None:
+            outs, losses, cohort_cst, cohort_cst_tree = self._flat_cohort_pass(
+                fstate, batches, ids, mask, full_batches, spec, m_t, eta_l,
+                cohort_rows=cohort_rows,
+            )
+        else:
+            cohort_pass = (self._sharded_cohort_pass if self._sharded
+                           else self._flat_cohort_pass)
+            outs, losses, cohort_cst, cohort_cst_tree = cohort_pass(
+                fstate, batches, ids, mask, full_batches, spec, m_t, eta_l
+            )
 
         # masked cohort means, reduced straight to flat (P,) buffers
         # (_masked_pmean; unused planes are None — never materialized,
@@ -890,10 +1043,23 @@ class FederatedEngine:
         # scatter updated client states back (only active cohort members):
         # ONE scatter on the (N, P) plane (kernel path; sharded planes are
         # padded — only real rows scatter) or per-leaf like the tree
-        # oracle (jnp path)
+        # oracle (jnp path).  Store-backed (emit_rows): the SAME per-row
+        # update, emitted as (C, P) rows for the host scatter instead.
         new_cst = fstate.client_states
+        rows_out = None
         if algo.needs_client_state:
-            if self._sharded:
+            if emit_rows:
+                if cfg.use_fused_kernel:
+                    rows_out = cohort_cst + outs.state_delta * w[:, None]
+                else:
+                    upd = jax.tree_util.tree_map(
+                        lambda a, d: a + d * w.reshape(
+                            (-1,) + (1,) * (d.ndim - 1)
+                        ).astype(a.dtype),
+                        cohort_cst_tree, outs.state_delta,
+                    )
+                    rows_out = spec.ravel(upd, batch_dims=1)
+            elif self._sharded:
                 C = ids.shape[0]
                 upd = cohort_cst + outs.state_delta[:C] * w[:, None]
                 new_cst = fstate.client_states.at[ids].set(upd)
@@ -918,8 +1084,13 @@ class FederatedEngine:
             eta_l=eta_l,
             bytes_down=n_active * jnp.float32(pay["down_per_client"]),
             bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+            n_clipped=(jnp.float32(0.0) if n_clipped is None
+                       else n_clipped.astype(jnp.float32)),
         )
-        return FedState(new_params, new_server, new_cst, fstate.rng), metrics
+        new_state = FedState(new_params, new_server, new_cst, fstate.rng)
+        if emit_rows:
+            return new_state, metrics, rows_out
+        return new_state, metrics
 
     def _fused_round_close(self, algo, fsrv, outs, w, n_active, x_t, eta_l,
                            discount=1.0):
@@ -956,7 +1127,8 @@ class FederatedEngine:
             return self._unravel_state(fstate, spec), metrics
         return self._tree_round_step(state, batches, ids, mask, full_batches)
 
-    def _tree_round_step(self, state: FedState, batches, ids, mask, full_batches):
+    def _tree_round_step(self, state: FedState, batches, ids, mask, full_batches,
+                         n_clipped=None):
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, state.server.round)
 
@@ -1023,6 +1195,8 @@ class FederatedEngine:
             eta_l=eta_l,
             bytes_down=n_active * jnp.float32(pay["down_per_client"]),
             bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+            n_clipped=(jnp.float32(0.0) if n_clipped is None
+                       else n_clipped.astype(jnp.float32)),
         )
         return FedState(new_params, new_server, new_cst, state.rng), metrics
 
@@ -1035,16 +1209,13 @@ class FederatedEngine:
         return self._round_step(state, batches, ids, mask, full_batches)
 
     # -------------------------------------------------- data-driven round
-    def _prepare_round(self, state: FedState, client_x, client_y):
-        """Per-round setup shared VERBATIM by ``run_round`` and the
-        ``run_rounds`` scan body: rng threading, cohort sampling, minibatch
-        and (MimeLite) full-batch gathers.  One implementation is what
-        makes the two paths' trajectories identical — don't fork it.
-
-        Returns (state-with-advanced-rng, batches, ids, mask, full).
-        """
-        rng, k_cohort, k_batch = jax.random.split(state.rng, 3)
-        ids, mask = sample_cohort(k_cohort, self.cfg)
+    def _sample_round(self, rng, client_x, client_y, t):
+        """rng threading + cohort sampling + minibatch/(MimeLite) full-batch
+        gathers for one round.  ``t`` is the round counter the availability
+        process may read (diurnal).  Returns
+        (advanced-rng, batches, ids, mask, full, n_clipped)."""
+        rng, k_cohort, k_batch = jax.random.split(rng, 3)
+        ids, mask, n_clipped = sample_cohort_ex(k_cohort, self.cfg, t)
         raw = gather_round_batches(
             client_x, client_y, k_batch, ids, self.cfg.local_steps, self.batch_size
         )
@@ -1057,14 +1228,34 @@ class FederatedEngine:
             # (C, B, ...) dummy with the right treedef for vmap; unused
             # unless needs_full_grad
             full = jax.tree_util.tree_map(lambda b: b[:, 0], batches)
-        return state._replace(rng=rng), batches, ids, mask, full
+        return rng, batches, ids, mask, full, n_clipped
+
+    def _prepare_round(self, state: FedState, client_x, client_y):
+        """Per-round setup shared VERBATIM by ``run_round`` and the
+        ``run_rounds`` scan body: rng threading, cohort sampling, minibatch
+        and (MimeLite) full-batch gathers.  One implementation is what
+        makes the two paths' trajectories identical — don't fork it.
+
+        Returns (state-with-advanced-rng, batches, ids, mask, full,
+        n_clipped).
+        """
+        rng, batches, ids, mask, full, n_clipped = self._sample_round(
+            state.rng, client_x, client_y, state.server.round
+        )
+        return state._replace(rng=rng), batches, ids, mask, full, n_clipped
 
     def run_round(self, state: FedState, data) -> Tuple[FedState, RoundMetrics]:
         """Samples cohort + minibatches from a FederatedData and steps."""
-        state, batches, ids, mask, full = self._prepare_round(
+        if self.population_store == "host":
+            state, ms = self.run_rounds_store(state, data, 1)
+            return state, jax.tree_util.tree_map(lambda a: a[0], ms)
+        state, batches, ids, mask, full, n_clipped = self._prepare_round(
             state, data.client_x, data.client_y
         )
-        return self.round_step(state, batches, ids, mask, full)
+        state, metrics = self.round_step(state, batches, ids, mask, full)
+        # round_step's public signature predates the clip metric — stamp it
+        # here so run_round/run_rounds report identically
+        return state, metrics._replace(n_clipped=n_clipped.astype(jnp.float32))
 
     # -------------------------------------------------- fused multi-round
     def run_rounds(self, state: FedState, data, n_rounds: int) -> Tuple[FedState, RoundMetrics]:
@@ -1089,6 +1280,8 @@ class FederatedEngine:
         """
         if n_rounds < 1:
             raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+        if self.population_store == "host":
+            return self.run_rounds_store(state, data, n_rounds)
         return self._run_rounds(state, data.client_x, data.client_y, n_rounds=n_rounds)
 
     def _run_rounds_impl(self, state: FedState, client_x, client_y, n_rounds: int):
@@ -1101,15 +1294,20 @@ class FederatedEngine:
             fstate = self._ravel_state(state, spec)
 
             def flat_body(st, _):
-                st, batches, ids, mask, full = self._prepare_round(st, client_x, client_y)
-                return self._flat_round_step(st, batches, ids, mask, full, spec)
+                st, batches, ids, mask, full, n_clipped = self._prepare_round(
+                    st, client_x, client_y
+                )
+                return self._flat_round_step(st, batches, ids, mask, full, spec,
+                                             n_clipped)
 
             fstate, metrics = jax.lax.scan(flat_body, fstate, None, length=n_rounds)
             return self._unravel_state(fstate, spec), metrics
 
         def body(st, _):
-            st, batches, ids, mask, full = self._prepare_round(st, client_x, client_y)
-            return self._tree_round_step(st, batches, ids, mask, full)
+            st, batches, ids, mask, full, n_clipped = self._prepare_round(
+                st, client_x, client_y
+            )
+            return self._tree_round_step(st, batches, ids, mask, full, n_clipped)
 
         return jax.lax.scan(body, state, None, length=n_rounds)
 
@@ -1194,6 +1392,16 @@ class FederatedEngine:
                 "in-flight cohort ring is a flat-plane carry (the tree path "
                 "stays the sync oracle)"
             )
+        if self.population_store == "host":
+            if eval_every:
+                raise ValueError(
+                    "population_store='host' runs the async ring as a host "
+                    "loop — in-scan eval is unavailable; eval between calls"
+                )
+            return self.run_rounds_store_async(
+                state, data, n_rounds, pipeline_depth=depth, staleness=stale,
+                drain=drain,
+            )
         xb = yb = wb = None
         if eval_every:
             if predict_fn is None or eval_data is None:
@@ -1265,7 +1473,9 @@ class FederatedEngine:
             grow the ring; every steady step rotates it — the popped
             uplink is by construction D−1 rounds old."""
             r0 = fst.server.round
-            fst, batches, ids, mask, full = self._prepare_round(fst, client_x, client_y)
+            fst, batches, ids, mask, full, n_clipped = self._prepare_round(
+                fst, client_x, client_y
+            )
             if mhist is None:
                 m_used = fst.server.momentum
             else:
@@ -1296,6 +1506,7 @@ class FederatedEngine:
                 bytes_up=n_active * jnp.float32(pay["up_per_client"]),
                 folded=jnp.float32(1.0 if fold else 0.0),
                 eval_acc=in_scan_eval(t, fst.params),
+                n_clipped=n_clipped.astype(jnp.float32),
             )
             return fst, pending, mhist, metrics
 
@@ -1347,7 +1558,7 @@ class FederatedEngine:
         return self._unravel_state(fstate, spec)
 
     def _launch_async_cohort(self, fstate: FedState, m_used, batches, ids,
-                             mask, full, spec: FlatSpec):
+                             mask, full, spec: FlatSpec, cohort_rows=None):
         """Client phase of one pipelined iteration: run the cohort against
         (current params, stale momentum) and pack its uplink as a ring
         entry.  Kernel path: outputs already ARE ``(C, P)`` planes and ride
@@ -1368,11 +1579,17 @@ class FederatedEngine:
         reduce-scatter D−1 rounds of compute to hide behind."""
         cfg, algo = self.cfg, self.algo
         eta_l = local_learning_rate(cfg, fstate.server.round)
-        cohort_pass = (self._sharded_cohort_pass if self._sharded
-                       else self._flat_cohort_pass)
-        outs, losses, _ = cohort_pass(
-            fstate, batches, ids, mask, full, spec, m_used, eta_l
-        )
+        if cohort_rows is not None:  # store-backed: pre-gathered host rows
+            outs, losses, _, _ = self._flat_cohort_pass(
+                fstate, batches, ids, mask, full, spec, m_used, eta_l,
+                cohort_rows=cohort_rows,
+            )
+        else:
+            cohort_pass = (self._sharded_cohort_pass if self._sharded
+                           else self._flat_cohort_pass)
+            outs, losses, _, _ = cohort_pass(
+                fstate, batches, ids, mask, full, spec, m_used, eta_l
+            )
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
         wp = self._pad_cohort(w, mode="zero") if self._sharded else w
@@ -1398,7 +1615,8 @@ class FederatedEngine:
         return entry, n_active, jnp.sum(losses * wp) / n_active
 
     def _fold_async_slot(self, fstate: FedState, entry: CohortUplink,
-                         spec: FlatSpec, discount):
+                         spec: FlatSpec, discount, fold_rows=None,
+                         emit_rows=False):
         """Server phase of one pipelined iteration: fold ONE ring entry —
         masked cohort mean, staleness-discounted momentum EMA + param step,
         client-state scatter — into the current flat state.  Every entry
@@ -1408,7 +1626,14 @@ class FederatedEngine:
         Leaves the round counter alone — it is launch-aligned (see the
         scan body).
 
-        Returns (new_fstate, ‖mean Δ‖ of the folded cohort)."""
+        Store-backed execution: ``fold_rows`` is the fold-time ``(C, P)``
+        gather from the population store (the resident path gathers the
+        plane HERE, at fold time — D−1 rounds after launch — so the host
+        loop gathers at the same point) and ``emit_rows=True`` returns the
+        updated rows instead of scattering into a resident plane.
+
+        Returns (new_fstate, ‖mean Δ‖ of the folded cohort), plus the
+        updated ``(C, P)`` rows when ``emit_rows``."""
         cfg, algo = self.cfg, self.algo
         w = entry.w  # (C_pad,) under cohort sharding — pad rows weigh 0
         n_active = jnp.sum(w)
@@ -1467,8 +1692,22 @@ class FederatedEngine:
         # scatter the folded cohort's client-state updates (stale entries
         # of non-participants untouched)
         new_cst = fstate.client_states
+        rows_out = None
         if algo.needs_client_state:
-            if self._sharded:
+            if emit_rows:
+                if cfg.use_fused_kernel:
+                    rows_out = fold_rows + entry.state_delta * w[:, None]
+                else:
+                    gathered = spec.unravel(fold_rows)
+                    sd_tree = spec.unravel(entry.state_delta, dtype=jnp.float32)
+                    upd = jax.tree_util.tree_map(
+                        lambda a, d: a + d * w.reshape(
+                            (-1,) + (1,) * (d.ndim - 1)
+                        ).astype(a.dtype),
+                        gathered, sd_tree,
+                    )
+                    rows_out = spec.ravel(upd, batch_dims=1)
+            elif self._sharded:
                 # padded ring rows are dropped BEFORE the scatter: a pad
                 # id (0) colliding with a real cohort member would make
                 # the duplicate-index .set nondeterministic
@@ -1494,7 +1733,238 @@ class FederatedEngine:
                 )
 
         new_state = FedState(new_params, new_server, new_cst, fstate.rng)
+        if emit_rows:
+            return new_state, _flat_norm(mean_delta), rows_out
         return new_state, _flat_norm(mean_delta)
+
+    # -------------------------------------------------- store-backed rounds
+    def _store_jits(self, spec: FlatSpec):
+        """Jitted per-round pieces of the store-backed host loops, cached
+        per FlatSpec.  The pieces ARE the resident engine's round functions
+        (``_sample_round``/``_flat_round_step``/``_launch_async_cohort``/
+        ``_fold_async_slot``) parameterized by host-gathered rows — sharing
+        the traced math verbatim is what makes the store path f32-bitwise
+        against the resident oracle at matched cohorts."""
+        cache = getattr(self, "_store_jit_cache", None)
+        if cache is None:
+            cache = self._store_jit_cache = {}
+        if spec in cache:
+            return cache[spec]
+
+        def sample_device(fst, client_x, client_y):
+            # device-resident FederatedData: the resident scan body's
+            # sampler, verbatim (same rng threading → matched cohorts)
+            return self._prepare_round(fst, client_x, client_y)
+
+        def sample_ids(rng, t):
+            # streaming data: sample only the cohort on device; the batch
+            # key degrades to a host seed for the on-demand generator
+            rng, k_cohort, k_batch = jax.random.split(rng, 3)
+            ids, mask, n_clipped = sample_cohort_ex(k_cohort, self.cfg, t)
+            seed = jax.random.randint(k_batch, (), 0, jnp.int32(2**31 - 1))
+            return rng, ids, mask, n_clipped, seed
+
+        def step(fst, batches, ids, mask, full, n_clipped, rows):
+            if rows is None:  # stateless spec: nothing to gather/emit
+                fst, m = self._flat_round_step(
+                    fst, batches, ids, mask, full, spec, n_clipped
+                )
+                return fst, m, None
+            return self._flat_round_step(
+                fst, batches, ids, mask, full, spec, n_clipped,
+                cohort_rows=rows, emit_rows=True,
+            )
+
+        def launch(fst, m_used, batches, ids, mask, full, rows):
+            return self._launch_async_cohort(
+                fst, m_used, batches, ids, mask, full, spec, cohort_rows=rows
+            )
+
+        def fold(fst, entry, fold_rows, discount):
+            if fold_rows is None:
+                fst, norm = self._fold_async_slot(fst, entry, spec, discount)
+                return fst, norm, None
+            return self._fold_async_slot(
+                fst, entry, spec, discount, fold_rows=fold_rows, emit_rows=True
+            )
+
+        cache[spec] = {
+            "sample_device": jax.jit(sample_device),
+            "sample_ids": jax.jit(sample_ids),
+            "step": jax.jit(step),
+            "launch": jax.jit(launch),
+            # discount is a static python float (rides SMEM coefficients)
+            "fold": jax.jit(fold, static_argnums=(3,)),
+        }
+        return cache[spec]
+
+    def _host_sample(self, jits, fstate: FedState, data, device_data: bool):
+        """One round's cohort + batches under the host loop.  Device-
+        resident ``FederatedData`` goes through the resident sampler
+        verbatim (bitwise-matched cohorts AND batches); streaming data
+        (``repro.data.population.StreamingClientData``) samples ids on
+        device and generates only the cohort's minibatches on the host."""
+        if device_data:
+            return jits["sample_device"](fstate, data.client_x, data.client_y)
+        rng, ids, mask, n_clipped, seed = jits["sample_ids"](
+            fstate.rng, fstate.server.round
+        )
+        ids_np = np.asarray(ids)
+        raw = data.host_round_batches(
+            ids_np, int(seed), self.cfg.local_steps, self.batch_size
+        )
+        batches = self._to_loss_batches(
+            {k: jnp.asarray(v) for k, v in raw.items()}
+        )
+        if self.algo.needs_full_grad:
+            full = self._to_loss_batches(
+                {k: jnp.asarray(v) for k, v in data.host_full_batches(ids_np).items()}
+            )
+        else:
+            full = jax.tree_util.tree_map(lambda b: b[:, 0], batches)
+        return fstate._replace(rng=rng), batches, ids, mask, full, n_clipped
+
+    def _require_store(self):
+        if self.population is None:
+            # init() attaches the store; a hand-built FedState lands here
+            raise RuntimeError(
+                "population store missing — call eng.init(params, rng) "
+                "before store-backed rounds"
+            )
+        return self.population
+
+    def run_rounds_store(self, state: FedState, data, n_rounds: int):
+        """Sync engine for ``population_store="host"``: a host loop of the
+        jitted round step with a store gather before and scatter after each
+        round.  No ``(N, ·)`` device array exists at any point — only the
+        ``(C, P)`` cohort block — so N is bounded by host memory over
+        TOUCHED clients, not device memory over the population.
+
+        ``data`` may be a device-resident ``FederatedData`` (the bitwise-
+        oracle pairing used by tests) or a ``StreamingClientData`` whose
+        shards generate on demand (the N=1e6 path)."""
+        cfg = self.cfg
+        if n_rounds < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+        spec = FlatSpec.from_tree(state.params)
+        jits = self._store_jits(spec)
+        fstate = self._ravel_state(state, spec)
+        device_data = hasattr(data, "client_x")
+        stateful = self.algo.needs_client_state
+        store = self._require_store() if stateful else None
+        metrics = []
+        for _ in range(n_rounds):
+            fstate, batches, ids, mask, full, n_clipped = self._host_sample(
+                jits, fstate, data, device_data
+            )
+            rows = jnp.asarray(store.gather(np.asarray(ids))) if stateful else None
+            fstate, m, new_rows = jits["step"](
+                fstate, batches, ids, mask, full, n_clipped, rows
+            )
+            if stateful:
+                store.scatter(np.asarray(ids), np.asarray(new_rows))
+            metrics.append(m)
+        state = self._unravel_state(fstate, spec)
+        return state, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *metrics)
+
+    def _host_fold(self, jits, fstate: FedState, entry: CohortUplink,
+                   discount: float, store, stateful: bool):
+        """Fold one ring entry under the host loop: fold-time store gather
+        (mirroring the resident fold's plane gather D−1 rounds after
+        launch), the jitted fold, and the row scatter back."""
+        if stateful:
+            ids_np = np.asarray(entry.ids)
+            frows = jnp.asarray(store.gather(ids_np))
+            fstate, mean_norm, new_rows = jits["fold"](
+                fstate, entry, frows, discount
+            )
+            store.scatter(ids_np, np.asarray(new_rows))
+        else:
+            fstate, mean_norm, _ = jits["fold"](fstate, entry, None, discount)
+        return fstate, mean_norm
+
+    def run_rounds_store_async(
+        self, state: FedState, data, n_rounds: int, *,
+        pipeline_depth: Optional[int] = None, staleness: Optional[int] = None,
+        drain: bool = True,
+    ):
+        """Async overlapping-cohort engine for ``population_store="host"``:
+        the resident scan's schedule — launch against (current params,
+        S-stale momentum), ring of D in-flight uplinks, fold the oldest,
+        launch-aligned round counter — replayed as a host loop with store
+        gathers/scatters at exactly the resident gather/scatter points.
+        The ring's ``state_delta`` planes are ``(C, P)`` (never ``(N, ·)``).
+        ``(D, S)`` semantics, warmup, discount γ^(D−1), and drain order
+        match ``run_rounds_async`` entry for entry."""
+        cfg, algo = self.cfg, self.algo
+        D = cfg.pipeline_depth if pipeline_depth is None else pipeline_depth
+        S = cfg.staleness if staleness is None else staleness
+        if n_rounds < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+        if D < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got {D}")
+        if S < 0:
+            raise ValueError(f"staleness must be >= 0, got {S}")
+        spec = FlatSpec.from_tree(state.params)
+        jits = self._store_jits(spec)
+        fstate = self._ravel_state(state, spec)
+        device_data = hasattr(data, "client_x")
+        stateful = algo.needs_client_state
+        store = self._require_store() if stateful else None
+        mhist = None
+        if S > 0 and algo.needs_momentum_broadcast:
+            mhist = [fstate.server.momentum for _ in range(S)]
+        discount = float(cfg.staleness_discount) ** (D - 1)
+        pay = self._payload_from_nbytes(spec.nbytes)
+        ring = []
+        metrics = []
+        for t in range(n_rounds):
+            r0 = fstate.server.round
+            fstate, batches, ids, mask, full, n_clipped = self._host_sample(
+                jits, fstate, data, device_data
+            )
+            if mhist is None:
+                m_used = fstate.server.momentum
+            else:  # S-deep delay line, read-before-write at slot t mod S
+                sm = t % S
+                m_used = mhist[sm]
+                mhist[sm] = fstate.server.momentum
+            rows = jnp.asarray(store.gather(np.asarray(ids))) if stateful else None
+            entry, n_active, loss = jits["launch"](
+                fstate, m_used, batches, ids, mask, full, rows
+            )
+            ring.append(entry)
+            fold_now = len(ring) >= D
+            if fold_now:
+                fstate, mean_norm = self._host_fold(
+                    jits, fstate, ring.pop(0), discount, store, stateful
+                )
+            else:  # pipeline fill: launch-only
+                mean_norm = jnp.float32(0.0)
+            # launch-aligned round counter, as in the resident scan body
+            fstate = fstate._replace(
+                server=fstate.server._replace(round=r0 + 1)
+            )
+            metrics.append(AsyncRoundMetrics(
+                loss=loss,
+                n_active=n_active,
+                delta_norm=mean_norm,
+                momentum_norm=_flat_norm(m_used),
+                eta_l=entry.eta_l,
+                bytes_down=n_active * jnp.float32(pay["down_per_client"]),
+                bytes_up=n_active * jnp.float32(pay["up_per_client"]),
+                folded=jnp.float32(1.0 if fold_now else 0.0),
+                eval_acc=jnp.float32(-1.0),
+                n_clipped=n_clipped.astype(jnp.float32),
+            ))
+        if drain:  # flush in-flight cohorts, oldest first
+            for entry in ring:
+                fstate, _ = self._host_fold(
+                    jits, fstate, entry, discount, store, stateful
+                )
+            ring = []
+        state = self._unravel_state(fstate, spec)
+        return state, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *metrics)
 
     @staticmethod
     def _to_loss_batches(raw):

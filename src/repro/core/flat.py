@@ -34,6 +34,12 @@ uplink launched at round t is folded D−1 rounds later when the server
 folds the (by then stale) cohort in — the kernel path's ``(C, P)`` slot
 layout is the same layout a cohort-axis reduce-scatter wants, which is
 what makes the ring the natural seam for multi-host cohort sharding.
+
+Under the out-of-core population store (``cfg.population_store="host"``,
+see ``repro.data.population``) the ring's client-state planes are the
+host-gathered ``(C, P)`` cohort rows — device memory never holds an
+``(N, ·)`` per-client plane; the population axis exists only in the host
+store's sparse row map.
 """
 from __future__ import annotations
 

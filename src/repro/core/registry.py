@@ -203,6 +203,22 @@ class AlgorithmSpec(NamedTuple):
         return tuple(names)
 
     @property
+    def wire_uplink_planes(self) -> Tuple[str, ...]:
+        """Uplink planes that actually cross the client→server WIRE —
+        §4.2's payload accounting as data.  ``uplink_planes`` minus the
+        state planes that stay client-local: feddyn's λ_i rides the ring
+        as a ``state_delta`` plane but never leaves the client in the real
+        system (``client_state_uplink=False``), so it costs no uplink
+        bytes.  The engine's payload metrics and ``fed_train --list-algos``
+        both derive bytes/round from this."""
+        names = ["delta"]
+        if self.needs_client_state and self.client_state_uplink:
+            names.append("state_delta")
+        if self.needs_full_grad:
+            names.append("extra")
+        return tuple(names)
+
+    @property
     def fold_planes(self) -> Tuple[str, ...]:
         """Uplink planes the ROUND CLOSE consumes (in first-use order).
         For declarative folds these are the planes named by the
@@ -439,8 +455,15 @@ def server_init(params, momentum_dtype="float32",
 def client_state_init(params, cfg):
     """Stacked ``(N, …)`` per-client control variates — allocated iff the
     registered spec sets ``needs_client_state`` (new stateful algorithms
-    get their planes automatically; nothing is keyed on names)."""
+    get their planes automatically; nothing is keyed on names).
+
+    Under an out-of-core population store (``cfg.population_store`` other
+    than "resident") the per-client planes live in host memory
+    (``repro.data.population``) — no ``(N, …)`` device array exists, so
+    this returns None and the engine attaches the store at ``init()``."""
     if not get_algorithm(cfg.algo).needs_client_state:
+        return None
+    if getattr(cfg, "population_store", "resident") != "resident":
         return None
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros((cfg.num_clients, *p.shape), p.dtype), params
@@ -478,11 +501,14 @@ def describe_algorithm(spec: AlgorithmSpec) -> Dict[str, str]:
             ("second_moment", spec.needs_second_moment),
         ) if on
     ] or ["—"]
+    wire = spec.wire_uplink_planes
     return {
         "algorithm": spec.name,
         "local step": direction,
         "server fold": server,
         "state planes": ", ".join(planes),
+        # §4.2 payload accounting: planes that cross the client→server wire
+        "uplink": f"{len(wire)}×P ({'+'.join(wire)})",
     }
 
 
@@ -491,7 +517,7 @@ def routing_table_md() -> str:
     registry (tests/test_registry.py asserts kernels/README.md embeds this
     verbatim — regenerate with ``python -m repro.core.registry --write``)."""
     rows = [describe_algorithm(get_algorithm(n)) for n in list_algorithms()]
-    cols = ["algorithm", "local step", "server fold", "state planes"]
+    cols = ["algorithm", "local step", "server fold", "state planes", "uplink"]
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     fmt = lambda r: "| " + " | ".join(r[c].ljust(widths[c]) for c in cols) + " |"
     head = fmt({c: c for c in cols})

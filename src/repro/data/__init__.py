@@ -5,6 +5,12 @@ from repro.data.synthetic import (
     make_synthetic_lm,
 )
 from repro.data.pipeline import FederatedData, lm_batch_iterator
+from repro.data.population import (
+    HostPopulationStore,
+    StreamingClientData,
+    availability_log_weights,
+    make_population_store,
+)
 
 __all__ = [
     "dirichlet_partition",
@@ -15,4 +21,8 @@ __all__ = [
     "make_synthetic_lm",
     "FederatedData",
     "lm_batch_iterator",
+    "HostPopulationStore",
+    "StreamingClientData",
+    "availability_log_weights",
+    "make_population_store",
 ]

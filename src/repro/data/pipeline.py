@@ -16,6 +16,13 @@ out, fully traceable) so the fused multi-round engine
 (``FederatedEngine.run_rounds``) can draw minibatches *inside* its jitted
 ``lax.scan`` body instead of round-tripping to the host between rounds; the
 ``FederatedData`` methods are thin wrappers over the same functions.
+
+This module assumes the whole population's data fits on device as one
+stacked ``(N, n_per, ...)`` array — fine up to ~1e4 clients.  Beyond that,
+``repro.data.population.StreamingClientData`` is the streaming counterpart:
+it materializes ONLY the sampled cohort's shards per round on the host
+(deterministically re-derived from ``(seed, client_id)``), pairing with the
+out-of-core ``HostPopulationStore`` engine path.
 """
 from __future__ import annotations
 

@@ -1,0 +1,277 @@
+"""Million-client population layer: out-of-core client state + availability.
+
+The engine's client-population axis has two resource problems at fleet
+scale (paper §6.2 is ABOUT fleets):
+
+1. stateful specs (scaffold c_i, feddyn λ_i) keep a stacked ``(N, P)``
+   device plane — 80 GB at N=1e6 for a 20k-param model, before the model
+   itself;
+2. ``FederatedData`` stacks every client's shard into ``(N, n_per, …)``
+   device arrays — same wall.
+
+This module removes both:
+
+``HostPopulationStore``
+    A sparse host-memory store of per-client flat state rows.  Rows are
+    ``np.float32 (P,)`` (the flat plane's wire dtype — see
+    ``repro.core.flat.FlatSpec``), keyed by client id, zero until first
+    written.  The engine gathers a dense ``(C, P)`` block for the cohort
+    before the round scan and scatters the updated block back after the
+    fold — one contiguous indexed copy each way, so device memory scales
+    with the COHORT and host memory with the set of *touched* clients.
+    The resident ``(N, P)`` path stays as the bitwise oracle behind
+    ``cfg.population_store="resident"`` (tests/test_population.py pins
+    f32-bitwise agreement on sync and async engines).
+
+``availability_log_weights``
+    Pluggable client-availability processes as pure data on ``FedConfig``
+    (``availability`` + its knobs): uniform (legacy, bitwise-preserved),
+    Zipf-skewed traffic, and a time-of-day sinusoid phase-distributed over
+    clients.  The sampler (``engine.sample_cohort_ex``) turns the log
+    weights into a Gumbel top-k draw without replacement, plus per-client
+    Bernoulli thinning under ``participation="bernoulli"`` and optional
+    straggler dropout.
+
+``StreamingClientData``
+    A virtual federated dataset: per-client shards are regenerated
+    deterministically from ``(seed, client_id)`` on demand, so only the
+    sampled cohort's minibatches ever materialize.  Duck-types the subset
+    of ``FederatedData`` the store-backed host loop needs
+    (``host_round_batches`` / ``host_full_batches`` / ``test_set``).
+
+See data/README.md ("Population store & streaming availability") for the
+layout and semantics contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+AVAILABILITY_PROCESSES = ("uniform", "zipf", "diurnal")
+POPULATION_STORES = ("resident", "host")
+
+
+# ----------------------------------------------------------------------
+# availability processes
+# ----------------------------------------------------------------------
+
+
+def availability_log_weights(cfg, t=None):
+    """``(N,)`` f32 log availability weights for round ``t`` — or ``None``
+    for the uniform process.
+
+    ``None`` is load-bearing: the sampler keeps the exact legacy
+    ``jax.random.choice`` / scalar-p Bernoulli branch when no weights are
+    given, so every pre-existing trajectory stays bitwise-identical.
+    ``t`` may be a traced round counter (the diurnal process is the only
+    one that reads it; ``None`` means t=0).
+    """
+    avail = getattr(cfg, "availability", "uniform")
+    if avail == "uniform":
+        return None
+    n = cfg.num_clients
+    i = jnp.arange(n, dtype=jnp.float32)
+    if avail == "zipf":
+        # traffic skew: w_i ∝ (i+1)^-s  (client ids double as a popularity
+        # ranking — the partial-participation survey's head/tail split)
+        return -jnp.float32(getattr(cfg, "zipf_exponent", 1.1)) * jnp.log1p(i)
+    if avail == "diurnal":
+        # time-of-day sinusoid: client i peaks at phase i/N of a
+        # `diurnal_period`-round day; amplitude→1 approaches on/off
+        period = jnp.float32(getattr(cfg, "diurnal_period", 24.0))
+        amp = jnp.float32(getattr(cfg, "diurnal_amplitude", 0.8))
+        tt = jnp.float32(0.0) if t is None else jnp.asarray(t, jnp.float32)
+        avail_i = 1.0 + amp * jnp.sin(2.0 * jnp.pi * (tt / period + i / jnp.float32(n)))
+        return jnp.log(jnp.maximum(avail_i, 1e-6))
+    raise ValueError(
+        f"unknown availability process {avail!r}; known: {AVAILABILITY_PROCESSES}"
+    )
+
+
+# ----------------------------------------------------------------------
+# client-state store
+# ----------------------------------------------------------------------
+
+
+class HostPopulationStore:
+    """Sparse host-memory store of per-client flat state rows.
+
+    Layout: ``{client_id: np.float32 (plane_size,)}`` — a client absent
+    from the dict reads as the zero row (every registered client-state
+    init is zeros, so "never touched" and "explicit zeros" coincide).
+    ``gather``/``scatter`` are the ONLY engine-facing operations; both are
+    dense contiguous copies over the cohort axis.
+
+    Checkpointing: ``to_pytree()`` packs the touched rows into
+    ``{"ids": int32 (M,), "rows": f32 (M, P)}`` (ids sorted, M = touched
+    count) — a shape no template can predict, hence
+    ``repro.checkpoint.ckpt.load_flat`` (template-free restore).
+    """
+
+    def __init__(self, num_clients: int, plane_size: int, dtype=np.float32):
+        self.num_clients = int(num_clients)
+        self.plane_size = int(plane_size)
+        self.dtype = np.dtype(dtype)
+        self._rows: Dict[int, np.ndarray] = {}
+
+    @property
+    def touched(self) -> int:
+        """Number of clients whose state has ever been written."""
+        return len(self._rows)
+
+    @property
+    def nbytes(self) -> int:
+        return len(self._rows) * self.plane_size * self.dtype.itemsize
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """Dense ``(C, P)`` block of the cohort's rows (zeros if unwritten)."""
+        ids = np.asarray(ids)
+        out = np.zeros((ids.shape[0], self.plane_size), dtype=self.dtype)
+        for r, cid in enumerate(ids):
+            row = self._rows.get(int(cid))
+            if row is not None:
+                out[r] = row
+        return out
+
+    def scatter(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        """Write the cohort's updated rows back (row r → client ids[r]).
+
+        Every row is written — including inactive (w=0) clients, whose row
+        the engine emits unchanged — mirroring the resident plane's
+        ``at[ids].set`` semantics exactly (bitwise, incl. signed zeros).
+        Cohorts are drawn without replacement, so ids are unique per call.
+        """
+        rows = np.asarray(rows, dtype=self.dtype)
+        if rows.shape != (len(ids), self.plane_size):
+            raise ValueError(
+                f"scatter rows shape {rows.shape} != ({len(ids)}, {self.plane_size})"
+            )
+        for r, cid in enumerate(np.asarray(ids)):
+            self._rows[int(cid)] = np.array(rows[r], dtype=self.dtype)
+
+    # -- checkpoint packing ------------------------------------------------
+
+    def to_pytree(self) -> Dict[str, np.ndarray]:
+        ids = np.array(sorted(self._rows), dtype=np.int32)
+        if len(ids):
+            rows = np.stack([self._rows[int(i)] for i in ids]).astype(self.dtype)
+        else:
+            rows = np.zeros((0, self.plane_size), dtype=self.dtype)
+        return {"ids": ids, "rows": rows}
+
+    @classmethod
+    def from_pytree(cls, tree: Dict[str, Any], num_clients: int,
+                    plane_size: Optional[int] = None) -> "HostPopulationStore":
+        ids = np.asarray(tree["ids"])
+        rows = np.asarray(tree["rows"])
+        if plane_size is None:
+            plane_size = rows.shape[1] if rows.ndim == 2 else 0
+        store = cls(num_clients, plane_size, dtype=rows.dtype if rows.size else np.float32)
+        store.scatter(ids, rows)
+        return store
+
+
+def make_population_store(cfg, plane_size: int) -> Optional[HostPopulationStore]:
+    """Store instance for ``cfg.population_store`` — ``None`` for resident."""
+    kind = getattr(cfg, "population_store", "resident")
+    if kind == "resident":
+        return None
+    if kind == "host":
+        return HostPopulationStore(cfg.num_clients, plane_size)
+    raise ValueError(
+        f"unknown population_store {kind!r}; known: {POPULATION_STORES}"
+    )
+
+
+# ----------------------------------------------------------------------
+# streaming federated data
+# ----------------------------------------------------------------------
+
+
+class StreamingClientData:
+    """On-demand per-client synthetic shards for store-backed populations.
+
+    ``FederatedData`` stacks all N clients' shards into device arrays —
+    impossible at N=1e6.  Here each client's shard is a pure function of
+    ``(seed, client_id)`` (same Gaussian-mixture family as
+    ``make_synthetic_classification``, with label skew via a dominant
+    class ``cid % n_classes``), regenerated on the host whenever that
+    client is sampled.  Only the cohort's ``(C, K, B, …)`` minibatch block
+    ever exists as an array.
+    """
+
+    def __init__(self, num_clients: int, dim: int = 32, n_classes: int = 10,
+                 n_per_client: int = 50, noise: float = 1.0,
+                 separation: float = 2.0, label_skew: float = 0.7,
+                 seed: int = 0):
+        self.num_clients = int(num_clients)
+        self.dim = int(dim)
+        self.n_classes = int(n_classes)
+        self.n_per_client = int(n_per_client)
+        self.noise = float(noise)
+        self.label_skew = float(label_skew)
+        self.seed = int(seed)
+        rng = np.random.default_rng(seed)
+        self.means = (rng.normal(size=(n_classes, dim)) * separation).astype(np.float32)
+        self.maps = (rng.normal(size=(n_classes, dim, dim))
+                     * (0.3 / np.sqrt(dim))).astype(np.float32)
+
+    # -- per-client generation --------------------------------------------
+
+    def client_dataset(self, cid: int):
+        """``(x (n_per, dim) f32, y (n_per,) i32)`` — deterministic in cid."""
+        rng = np.random.default_rng((self.seed, 977, int(cid)))
+        n = self.n_per_client
+        dominant = int(cid) % self.n_classes
+        take = rng.random(n) < self.label_skew
+        y = np.where(take, dominant,
+                     rng.integers(0, self.n_classes, size=n)).astype(np.int32)
+        eps = rng.normal(size=(n, self.dim)).astype(np.float32)
+        x = (self.means[y] + np.einsum("nij,nj->ni", self.maps[y], eps)
+             + self.noise * rng.normal(size=(n, self.dim)))
+        return x.astype(np.float32), y
+
+    # -- host-loop batch interface ----------------------------------------
+
+    def host_round_batches(self, ids: np.ndarray, seed: int,
+                           local_steps: int, batch_size: int) -> Dict[str, np.ndarray]:
+        """Cohort minibatch block ``{"x": (C,K,B,dim), "y": (C,K,B)}``.
+
+        ``seed`` is the round's batch key (the engine derives it from the
+        same rng stream the device path splits), so resampling is
+        deterministic per round.
+        """
+        ids = np.asarray(ids)
+        rng = np.random.default_rng(int(seed))
+        C = ids.shape[0]
+        x = np.empty((C, local_steps, batch_size, self.dim), np.float32)
+        y = np.empty((C, local_steps, batch_size), np.int32)
+        for r, cid in enumerate(ids):
+            cx, cy = self.client_dataset(int(cid))
+            idx = rng.integers(0, self.n_per_client, size=(local_steps, batch_size))
+            x[r] = cx[idx]
+            y[r] = cy[idx]
+        return {"x": x, "y": y}
+
+    def host_full_batches(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        """Full client shards ``{"x": (C, n_per, dim), "y": (C, n_per)}``
+        (mime-style full-batch gradients)."""
+        ids = np.asarray(ids)
+        C = ids.shape[0]
+        x = np.empty((C, self.n_per_client, self.dim), np.float32)
+        y = np.empty((C, self.n_per_client), np.int32)
+        for r, cid in enumerate(ids):
+            x[r], y[r] = self.client_dataset(int(cid))
+        return {"x": x, "y": y}
+
+    def test_set(self, n_test: int = 2_000):
+        """Held-out iid test split from the same mixture (no label skew)."""
+        rng = np.random.default_rng((self.seed, 1009))
+        y = rng.integers(0, self.n_classes, size=n_test).astype(np.int32)
+        eps = rng.normal(size=(n_test, self.dim)).astype(np.float32)
+        x = (self.means[y] + np.einsum("nij,nj->ni", self.maps[y], eps)
+             + self.noise * rng.normal(size=(n_test, self.dim)))
+        return x.astype(np.float32), y

@@ -18,6 +18,15 @@ pipelined scan for the whole run, with evaluation device-resident INSIDE
 the scan at the ``--eval-every`` cadence — zero host round-trips between
 round 0 and the final metrics fetch.
 
+``--population-store host`` switches to the out-of-core population engine
+(``run_rounds_store``): per-client state lives in a sparse host store
+(gathered/scattered per cohort as ``(C, P)`` blocks) and client shards
+stream on demand (``repro.data.population``), so ``--num-clients 1000000``
+runs without any ``(N, ·)`` device array.  ``--availability`` picks the
+cohort-sampling process (zipf traffic skew, time-of-day sinusoid);
+``--dropout-rate`` adds straggler dropout.  Both work on the resident
+engine too.
+
 ``--dryrun`` resolves the full config, writes it (plus the engine's
 payload accounting) to ``benchmarks/artifacts/fed_train_dryrun.json``, and
 exits without training — the artifact is how CLI-flag wiring is asserted
@@ -47,7 +56,8 @@ from repro.core import (
     list_algorithms,
     make_eval_fn,
 )
-from repro.data import FederatedData, make_synthetic_classification
+from repro.data import FederatedData, StreamingClientData, make_synthetic_classification
+from repro.data.population import AVAILABILITY_PROCESSES, POPULATION_STORES
 from repro.models.small import classification_loss, mlp_classifier
 from repro.utils.metrics import MetricLogger
 
@@ -74,10 +84,18 @@ def run_federated(
     async_pipeline: bool = False,
 ):
     """Returns (final_test_acc, history MetricLogger)."""
-    x_tr, y_tr, x_te, y_te = make_synthetic_classification(
-        n_classes=n_classes, dim=dim, n_train=n_train, n_test=n_test, seed=seed
-    )
-    data = FederatedData(x_tr, y_tr, cfg.num_clients, dirichlet_alpha=dirichlet, seed=seed)
+    if cfg.population_store == "host":
+        # out-of-core path: no (N, n_per, …) device stack exists — shards
+        # regenerate on demand per sampled cohort (label skew replaces the
+        # Dirichlet partition; --dirichlet is a no-op here)
+        data = StreamingClientData(cfg.num_clients, dim=dim,
+                                   n_classes=n_classes, seed=seed)
+        x_te, y_te = data.test_set(min(n_test, 2_000))
+    else:
+        x_tr, y_tr, x_te, y_te = make_synthetic_classification(
+            n_classes=n_classes, dim=dim, n_train=n_train, n_test=n_test, seed=seed
+        )
+        data = FederatedData(x_tr, y_tr, cfg.num_clients, dirichlet_alpha=dirichlet, seed=seed)
     model = mlp_classifier((dim, hidden, hidden, n_classes))
     loss_fn = classification_loss(model.apply)
     eng = FederatedEngine(cfg, loss_fn, batch_size=batch_size)
@@ -91,6 +109,17 @@ def run_federated(
     x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
     acc = 0.0
     if async_pipeline:
+        if cfg.population_store == "host":
+            # store-backed async is a host loop (gathers/scatters between
+            # rounds); in-scan eval doesn't exist — evaluate once at the end
+            state, ms = eng.run_rounds_async(state, data, cfg.rounds)
+            acc = evaluate(state.params, x_te_j, y_te_j)
+            log.log(round=cfg.rounds, algo=cfg.algo,
+                    loss=round(float(ms.loss[-1]), 4),
+                    test_acc=round(acc, 4), n_active=int(ms.n_active[-1]),
+                    mb_down=round(float(ms.bytes_down[-1]) / 2**20, 2),
+                    mb_up=round(float(ms.bytes_up[-1]) / 2**20, 2))
+            return acc, log
         # the WHOLE run — cohort overlap, minibatch draws, eval — is one
         # jitted pipelined scan; eval accuracies come back in the stacked
         # metrics (−1.0 off-cadence)
@@ -141,15 +170,38 @@ def run_federated(
     return acc, log
 
 
-def list_algos_text() -> str:
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n:.0f} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def list_algos_text(dim: int = 32, hidden: int = 128, n_classes: int = 10) -> str:
     """One line per registered algorithm: state-plane requirements + kernel
     routing, rendered from the registry (the same ``describe_algorithm``
-    rows the kernels/README.md table is generated from)."""
-    rows = [describe_algorithm(get_algorithm(n)) for n in list_algorithms()]
-    cols = ["algorithm", "local step", "server fold", "state planes"]
+    rows the kernels/README.md table is generated from), plus the §4.2
+    wire cost: per-client uplink bytes/round = |wire_uplink_planes| × P × 4
+    for this driver's default model (abstract shapes only — nothing is
+    materialized)."""
+    model = mlp_classifier((dim, hidden, hidden, n_classes))
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    P = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+    rows = []
+    for n in list_algorithms():
+        spec = get_algorithm(n)
+        r = describe_algorithm(spec)
+        r["uplink bytes/round"] = (
+            f"{_fmt_bytes(len(spec.wire_uplink_planes) * P * 4)}/client"
+        )
+        rows.append(r)
+    cols = ["algorithm", "local step", "server fold", "state planes",
+            "uplink", "uplink bytes/round"]
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
     lines += ["  ".join(r[c].ljust(widths[c]) for c in cols) for r in rows]
+    lines.append(f"(P = {P:,} params: mlp {dim}-{hidden}-{hidden}-{n_classes}, f32 wire)")
     return "\n".join(lines)
 
 
@@ -162,7 +214,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--list-algos", action="store_true",
                     help="print every registered algorithm (state-plane "
                          "requirements + kernel routing) and exit")
-    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--clients", "--num-clients", dest="clients",
+                    type=int, default=100)
     ap.add_argument("--cohort", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--local-steps", type=int, default=10)
@@ -193,6 +246,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="FedACG-style per-round-of-staleness fold weight γ")
     ap.add_argument("--async", dest="async_pipeline", action="store_true",
                     help="force the async engine even at depth 1 / staleness 0")
+    ap.add_argument("--population-store", default="resident",
+                    choices=list(POPULATION_STORES),
+                    help="'host' offloads per-client state to an out-of-core "
+                         "host store (gather/scatter per cohort; no (N, P) "
+                         "device plane) and streams client shards on demand "
+                         "— the N=1e6 path")
+    ap.add_argument("--availability", default="uniform",
+                    choices=list(AVAILABILITY_PROCESSES),
+                    help="client availability process driving cohort "
+                         "sampling (uniform keeps the legacy bitwise draw)")
+    ap.add_argument("--zipf-exponent", type=float, default=1.1,
+                    help="skew s of the zipf availability process (w_i ∝ (i+1)^-s)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round straggler probability: sampled clients "
+                         "drop out of the cohort mask with this rate")
     ap.add_argument("--cohort-shard", type=int, default=0,
                     help="shard the client axis over N devices (a "
                          "('clients',) mesh; each device runs C/N clients "
@@ -218,6 +286,10 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
         pipeline_depth=args.pipeline_depth, staleness=args.staleness,
         staleness_discount=args.staleness_discount,
         cohort_shard=args.cohort_shard,
+        population_store=args.population_store,
+        availability=args.availability,
+        zipf_exponent=args.zipf_exponent,
+        dropout_rate=args.dropout_rate,
     )
 
 
@@ -231,6 +303,9 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
     assert cfg.pipeline_depth == args.pipeline_depth
     assert cfg.staleness == args.staleness
     assert cfg.cohort_shard == args.cohort_shard
+    assert cfg.population_store == args.population_store
+    assert cfg.availability == args.availability
+    assert cfg.dropout_rate == args.dropout_rate
     payload = {
         "resolved_config": dataclasses.asdict(cfg),
         "engine_mode": (
@@ -272,6 +347,12 @@ def main(argv=None) -> int:
     if args.cohort_shard > 0 and not args.flat_plane:
         ap.error("--cohort-shard shards the flat (C, P) uplink planes — "
                  "drop --no-flat-plane")
+    if args.population_store == "host" and not args.flat_plane:
+        ap.error("--population-store host gathers/scatters flat (C, P) "
+                 "state rows — drop --no-flat-plane")
+    if args.population_store == "host" and args.cohort_shard > 0:
+        ap.error("--population-store host is a single-device host loop; "
+                 "it does not compose with --cohort-shard yet")
     cfg = resolve_config(args)
     if args.dryrun:
         path = write_dryrun_artifact(cfg, args)

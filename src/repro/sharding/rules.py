@@ -296,6 +296,11 @@ def fed_state_specs(params_specs: Any, cfg_fed, mesh) -> Any:
         second_moment=params_specs if algo.needs_second_moment else None,
         round=P(),
     )
+    # stacked (N, …) planes only exist on the RESIDENT population path —
+    # an out-of-core store (cfg_fed.population_store="host") keeps them in
+    # host memory and FedState.client_states is None (nothing to shard)
     client_states = (jax.tree_util.tree_map(stack, params_specs)
-                     if algo.needs_client_state else None)
+                     if algo.needs_client_state
+                     and getattr(cfg_fed, "population_store", "resident") == "resident"
+                     else None)
     return dict(params=params_specs, server=server, client_states=client_states, rng=P())
