@@ -1,0 +1,110 @@
+"""Convergence-vs-fault-rate curves (PR-7 fault-tolerant execution).
+
+Sweeps the per-client uplink drop rate {0.0, 0.2, 0.4} with a constant 1%
+NaN payload-corruption rate (every nonzero-fault cell also exercises the
+quarantine path) over fedcm / fedavg / scaffold — the paper's momentum
+method against the stateless and stateful baselines — and records final
+test accuracy, mean surviving cohort size, total dropped / quarantined
+uplinks, and quorum-skipped rounds.  The question the curve answers:
+how much accuracy does client-level momentum buy back as the uplink gets
+lossier?
+
+Faults ride the engine as pure ``FaultConfig`` data (seeded stream keyed
+by absolute round x client id, so every cell is reproducible); drop-rate
+0.0 runs with ``fault=None`` — the bitwise-preserved baseline engine.
+
+The artifact is rev-stamped; ``benchmarks/fused_rounds.py`` folds the
+rows into the top-level ``BENCH_fused_rounds.json`` trajectory summary
+when the revs match.
+
+    PYTHONPATH=src python -m benchmarks.fault_tolerance [--rounds 40]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import git_rev, print_table, save_artifact
+from repro.configs.base import FaultConfig, FedConfig
+from repro.core import FederatedEngine, make_eval_fn
+from repro.data import FederatedData, make_synthetic_classification
+from repro.models.small import classification_loss, mlp_classifier
+
+ALGOS = ["fedcm", "fedavg", "scaffold"]
+DROP_RATES = [0.0, 0.2, 0.4]
+CORRUPT_RATE = 0.01  # constant NaN-plane corruption alongside every sweep cell
+
+DIM, N_CLASSES, HIDDEN = 32, 10, 64
+N_CLIENTS, COHORT, LOCAL_STEPS, BATCH = 100, 10, 5, 20
+
+
+def run_cell(algo: str, drop_rate: float, rounds: int, seed: int = 0) -> dict:
+    fault = None
+    if drop_rate > 0.0:
+        fault = FaultConfig(drop_rate=drop_rate, corrupt_rate=CORRUPT_RATE,
+                            corrupt_mode="nan", seed=seed)
+    cfg = FedConfig(
+        algo=algo, num_clients=N_CLIENTS, cohort_size=COHORT,
+        local_steps=LOCAL_STEPS, alpha=0.1, eta_l=0.05, eta_g=1.0,
+        participation="bernoulli", rounds=rounds, seed=seed,
+        fault=fault, min_quorum=2,
+    )
+    x_tr, y_tr, x_te, y_te = make_synthetic_classification(
+        n_classes=N_CLASSES, dim=DIM, n_train=20_000, n_test=2_000, seed=seed)
+    data = FederatedData(x_tr, y_tr, N_CLIENTS, dirichlet_alpha=0.6, seed=seed)
+    model = mlp_classifier((DIM, HIDDEN, HIDDEN, N_CLASSES))
+    eng = FederatedEngine(cfg, classification_loss(model.apply),
+                          batch_size=BATCH)
+    state = eng.init(model.init(jax.random.PRNGKey(seed)),
+                     jax.random.PRNGKey(seed + 1))
+    state, ms = eng.run_rounds(state, data, rounds)
+    evaluate = make_eval_fn(model.apply)
+    acc = evaluate(state.params, jnp.asarray(x_te), jnp.asarray(y_te))
+    finite = all(bool(jnp.all(jnp.isfinite(l)))
+                 for l in jax.tree_util.tree_leaves(state.params))
+    row = {
+        "algo": algo,
+        "drop_rate": drop_rate,
+        "corrupt_rate": CORRUPT_RATE if fault is not None else 0.0,
+        "acc_final": round(float(acc), 4),
+        "params_finite": finite,
+        "mean_active": round(float(np.mean(np.asarray(ms.n_active))), 2),
+    }
+    if fault is not None:
+        row["n_dropped"] = int(np.sum(np.asarray(ms.n_dropped)))
+        row["n_quarantined"] = int(np.sum(np.asarray(ms.n_quarantined)))
+        row["quorum_skipped"] = int(np.sum(np.asarray(ms.quorum_skipped)))
+    else:
+        row["n_dropped"] = row["n_quarantined"] = row["quorum_skipped"] = 0
+    return row
+
+
+def main(rounds: int = 40, seed: int = 0) -> list:
+    rows = []
+    for drop in DROP_RATES:
+        for algo in ALGOS:
+            row = run_cell(algo, drop, rounds, seed=seed)
+            rows.append(row)
+            print(f"  drop={drop:<4} {algo:9s} acc={row['acc_final']:.4f} "
+                  f"finite={row['params_finite']} "
+                  f"active={row['mean_active']:5.2f} "
+                  f"dropped={row['n_dropped']} quar={row['n_quarantined']} "
+                  f"skipped={row['quorum_skipped']}")
+    save_artifact("fault_tolerance", {"rev": git_rev(), "rows": rows})
+    print_table("Convergence vs fault rate (1% NaN corruption alongside)",
+                rows, ["algo", "drop_rate", "acc_final", "params_finite",
+                       "mean_active", "n_dropped", "n_quarantined",
+                       "quorum_skipped"])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(a.rounds, a.seed)

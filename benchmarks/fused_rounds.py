@@ -84,6 +84,11 @@ COHORT_ARTIFACT = Path(__file__).resolve().parent / "artifacts" / "cohort_sharde
 PARTICIPATION_ARTIFACT = (
     Path(__file__).resolve().parent / "artifacts" / "participation_robustness.json"
 )
+#: convergence-vs-fault-rate curves (fault-injected engine, PR-7); folded
+#: into the trajectory when current
+FAULT_ARTIFACT = (
+    Path(__file__).resolve().parent / "artifacts" / "fault_tolerance.json"
+)
 #: top-level per-PR perf trajectory: rounds/s per workload, one entry per
 #: commit — the diffable history CI uploads (and the repo carries)
 BENCH_SUMMARY = Path(__file__).resolve().parents[1] / "BENCH_fused_rounds.json"
@@ -337,6 +342,21 @@ def write_trajectory_summary(result: dict) -> dict:
         else:
             entry["participation"] = {
                 "stale_rev": pr.get("rev") if isinstance(pr, dict) else "pre-harness"
+            }
+    if FAULT_ARTIFACT.exists():
+        ft = json.loads(FAULT_ARTIFACT.read_text())
+        if isinstance(ft, dict) and ft.get("rev") == entry["rev"]:
+            # convergence-vs-fault-rate: acc per (algo, drop rate) plus the
+            # degradation counters — the fault harness's headline numbers
+            entry["fault_tolerance"] = [
+                {k: row[k] for k in ("algo", "drop_rate", "acc_final",
+                                     "params_finite", "n_dropped",
+                                     "n_quarantined", "quorum_skipped")}
+                for row in ft.get("rows", [])
+            ]
+        else:
+            entry["fault_tolerance"] = {
+                "stale_rev": ft.get("rev") if isinstance(ft, dict) else "pre-harness"
             }
     data = {"trajectory": []}
     if BENCH_SUMMARY.exists():

@@ -1,3 +1,17 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, latest_step
+from repro.checkpoint.ckpt import (
+    latest_step,
+    load_checkpoint,
+    load_fed_run,
+    load_flat,
+    save_checkpoint,
+    save_fed_run,
+)
 
-__all__ = ["load_checkpoint", "save_checkpoint", "latest_step"]
+__all__ = [
+    "latest_step",
+    "load_checkpoint",
+    "load_fed_run",
+    "load_flat",
+    "save_checkpoint",
+    "save_fed_run",
+]

@@ -52,9 +52,22 @@ def save_checkpoint(directory: str, step: int, tree: Any, meta: Optional[Dict] =
     payload["__meta__"] = dict(meta or {}, step=step)
     fname = os.path.join(directory, f"step_{step}.msgpack")
     tmp = fname + ".tmp"
+    # atomic publication: tmp + fsync + rename.  A reader (or a resumed
+    # run) either sees the previous complete checkpoint or this complete
+    # one — never a torn file, even across a kill/power-loss mid-write.
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, fname)  # atomic publish
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, fname)
+    try:  # persist the rename itself (directory entry)
+        dfd = os.open(directory, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:  # platforms that refuse directory fsync
+        pass
     return fname
 
 
@@ -112,6 +125,53 @@ def load_flat(directory: str, step: Optional[int] = None) -> Tuple[Dict[str, Any
             arr = np.frombuffer(entry["data"], dtype=np.dtype(entry["dtype"]))
             out[key] = jnp.asarray(arr.reshape(entry["shape"]))
     return out, meta
+
+
+def save_fed_run(directory: str, step: int, state: Any, population: Any = None,
+                 meta: Optional[Dict] = None) -> str:
+    """One atomic snapshot of a whole federated run.
+
+    Packs ``{"state": FedState}`` plus, when a host population store is
+    in play, ``{"population": store.to_pytree()}`` into a single
+    ``step_<N>.msgpack`` — the two halves publish together or not at all,
+    so a kill between "state written" and "store written" cannot leave a
+    resumable-but-inconsistent pair on disk.  ``population`` accepts the
+    store object (``to_pytree`` is called) or an already-packed dict."""
+    tree: Dict[str, Any] = {"state": state}
+    if population is not None:
+        tree["population"] = (
+            population.to_pytree() if hasattr(population, "to_pytree") else population
+        )
+    return save_checkpoint(directory, step, tree, meta=meta)
+
+
+def load_fed_run(directory: str, step: Optional[int], like_state: Any,
+                 num_clients: Optional[int] = None) -> Tuple[Any, Any, Dict]:
+    """Restore a ``save_fed_run`` snapshot → ``(state, population, meta)``.
+
+    The FedState half restores through the template path (``like_state``
+    fixes structure and dtypes; extra ``population/…`` keys in the payload
+    are ignored by construction).  The population half — whose packed
+    ``(M, P)`` shape no template can predict — restores template-free via
+    ``load_flat`` and, when ``num_clients`` is given, comes back as a
+    rebuilt ``HostPopulationStore``; otherwise as the raw packed dict.
+    ``population`` is ``None`` when the snapshot carried no store."""
+    state, meta = load_checkpoint(directory, step, {"state": like_state})
+    flat, _ = load_flat(directory, step if step is not None else meta.get("step"))
+    pop_tree = {
+        k.split("/", 1)[1]: np.asarray(v)
+        for k, v in flat.items()
+        if k.startswith("population/")
+    }
+    population: Any = None
+    if pop_tree:
+        if num_clients is not None:
+            from repro.data.population import HostPopulationStore
+
+            population = HostPopulationStore.from_pytree(pop_tree, num_clients)
+        else:
+            population = pop_tree
+    return state["state"], population, meta
 
 
 def latest_step(directory: str) -> Optional[int]:

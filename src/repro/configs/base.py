@@ -182,6 +182,54 @@ SHAPES: Dict[str, ShapeConfig] = {
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Fault injection as pure config data (seeded, reproducible).
+
+    Every fault is a mask/plane transform applied between cohort launch
+    and server fold, drawn from a PRNG chain keyed by
+    ``(seed, absolute round, client id)`` — NOT by cohort slot — so a
+    client's fate in a round is invariant to sampler placement and a
+    kill/resume replays the identical fault sequence.  ``fault=None`` on
+    :class:`FedConfig` traces no fault code at all: those paths stay
+    f32-bitwise against the fault-free engine.
+    """
+
+    # per-client per-round probability the uplink is lost entirely
+    drop_rate: float = 0.0
+    # straggler deadline model: client round time ~ LogNormal(0, σ) in
+    # units of the median client; a client slower than ``deadline`` misses
+    # the round (its uplink is treated as dropped).  0 = no deadline.
+    deadline: float = 0.0
+    straggler_sigma: float = 0.5
+    # payload corruption: per-client probability the uplink delta plane
+    # arrives corrupted, and how — "nan"/"inf" overwrite the row with that
+    # value (a dead-accelerator payload); "noise" adds relative Gaussian
+    # bit-noise of scale ``noise_scale × |value|`` (a flaky-link payload).
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "nan"  # nan | inf | noise
+    noise_scale: float = 1.0
+    # transient host-store failures: gather/scatter raise
+    # TransientStoreError with this probability; the engine retries with
+    # capped exponential backoff (base·2^attempt, capped, then re-raise
+    # after max_retries).  Retries never change math — a run with store
+    # failures is bitwise-equal to one without.
+    store_failure_rate: float = 0.0
+    store_max_retries: int = 6
+    store_backoff_base: float = 0.02
+    store_backoff_cap: float = 0.5
+    # uplink quarantine: zero the fold-weight row (and sanitize the
+    # payload rows to exact zeros, so 0·NaN never reaches a reduction) of
+    # any client whose uplink is non-finite; when quarantine_norm_mult
+    # > 0 also quarantine finite rows whose ‖Δ‖ exceeds
+    # mult × median(‖Δ‖ of the surviving cohort) — a norm-outlier fence.
+    quarantine: bool = True
+    quarantine_norm_mult: float = 0.0
+    # fault-stream seed — independent of FedConfig.seed so the same
+    # trajectory can be replayed under different fault realizations
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """Federated round configuration (paper §6.1 defaults)."""
 
@@ -284,6 +332,21 @@ class FedConfig:
     # static pad overflow ~never (p < 3e-7); either way an overflow is now
     # COUNTED in RoundMetrics.n_clipped instead of silently truncated.
     bernoulli_capacity_sigma: float = 5.0
+    # ---- fault tolerance ------------------------------------------------
+    # fault injection model (None = no fault code traced; see FaultConfig)
+    fault: Optional[FaultConfig] = None
+    # minimum surviving cohort for the server fold to apply: when fewer
+    # than max(1, min_quorum) clients survive drops + quarantine, the
+    # round becomes a no-op — params/momentum carried unchanged, client
+    # state writes suppressed, RoundMetrics.quorum_skipped = 1.  The
+    # implicit floor of 1 is the empty-cohort guard (an all-zero weight
+    # row used to 0/0-poison the masked mean with NaN).
+    min_quorum: int = 0
+    # let sample_cohort_ex produce an EMPTY cohort (bernoulli draw of 0 /
+    # total dropout) instead of force-keeping one client.  Safe now that
+    # empty rounds degrade to guarded no-ops; default off preserves the
+    # legacy keep-first sampler bitwise.
+    allow_empty_cohort: bool = False
 
 
 @dataclass(frozen=True)

@@ -32,6 +32,13 @@ from repro.core.engine import (
     sample_cohort,
     sample_cohort_ex,
 )
+from repro.core.faults import (
+    FaultPlan,
+    corrupt_uplink,
+    fault_masks,
+    rows_finite,
+    zero_rows,
+)
 from repro.core.flat import CohortUplink, FlatSpec, LeafSpec, ring_push
 from repro.core.registry import (
     AlgorithmSpec,
@@ -67,9 +74,14 @@ __all__ = [
     "server_init",
     "unregister_algorithm",
     "AsyncRoundMetrics",
+    "FaultPlan",
     "FederatedEngine",
     "FedState",
     "RoundMetrics",
+    "corrupt_uplink",
+    "fault_masks",
+    "rows_finite",
+    "zero_rows",
     "ring_push",
     "client_update",
     "cohort_capacity",

@@ -137,10 +137,29 @@ behind the launch it consumes — the latency the overlap hides.  Flat +
 kernel path only; the spec's ``server_post_fn`` runs replicated after
 the gather, and ``server_fn`` escape hatches get scattered means
 (``repro.core.flat.cohort_mean_scatter``) into a replicated escape.
+
+Fault tolerance (``cfg.fault`` / ``cfg.min_quorum``): faults are pure
+config data (``repro.configs.base.FaultConfig``, drawn by
+``repro.core.faults`` keyed on (seed, absolute round, client id)) spliced
+between launch and fold on every path — uplink drops and straggler
+deadlines thin the ``(C,)`` mask, payload corruption (NaN/Inf planes,
+scaled bit-noise) rewrites delta rows, and a quarantine pass zeroes the
+fold-weight row AND sanitizes the payload rows of any non-finite (or
+norm-outlier) uplink so 0·NaN never reaches a reduction.  Degradation is
+graceful by construction: every masked-mean denominator is guarded
+(``max(n_active, 1)``), and a round whose surviving cohort falls below
+``max(1, cfg.min_quorum)`` becomes a no-op — params/momentum selected
+through unchanged, client-state writes suppressed — surfaced as
+``RoundMetrics.quorum_skipped`` next to ``n_dropped`` / ``n_quarantined``
+/ ``n_retries`` (host-store gather/scatter retries with capped
+exponential backoff).  ``fault=None`` traces none of this and stays
+f32-bitwise against the fault-free engine; in the async ring, faulted
+planes ride the D−1 rounds to their fold like any other uplink.
 """
 from __future__ import annotations
 
 import math
+import time
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -161,6 +180,13 @@ from repro.core.algorithms import (
     server_init,
     sparse_client_finalize,
 )
+from repro.core.faults import (
+    corrupt_uplink,
+    fault_masks,
+    rows_finite,
+    rows_sqnorm,
+    zero_rows,
+)
 from repro.core.flat import (
     CohortUplink,
     FlatSpec,
@@ -171,6 +197,7 @@ from repro.core.flat import (
 from repro.data.pipeline import gather_full_client_batch, gather_round_batches
 from repro.data.population import (
     POPULATION_STORES,
+    TransientStoreError,
     availability_log_weights,
     make_population_store,
 )
@@ -238,6 +265,11 @@ class RoundMetrics(NamedTuple):
     # bernoulli draws beyond the static cohort capacity this round (clipped
     # clients sat out; 0 under "fixed" and at the default 5σ capacity)
     n_clipped: jax.Array = None
+    # ---- fault-tolerance counters (0 everywhere when cfg.fault is None) --
+    n_dropped: jax.Array = None  # uplinks lost to drop_rate / deadline
+    n_quarantined: jax.Array = None  # uplinks zeroed by the quarantine pass
+    n_retries: jax.Array = None  # host-store gather/scatter retries
+    quorum_skipped: jax.Array = None  # 1.0 when survivors < max(1, min_quorum)
 
 
 class AsyncRoundMetrics(NamedTuple):
@@ -257,6 +289,13 @@ class AsyncRoundMetrics(NamedTuple):
     folded: jax.Array  # 0/1: did this round fold a completed cohort
     eval_acc: jax.Array  # in-scan eval accuracy, −1.0 when not evaluated
     n_clipped: jax.Array = None  # capacity-overflow clips of the LAUNCHED cohort
+    # fault counters: n_dropped/n_quarantined describe the LAUNCHED cohort
+    # (faults hit the uplink at launch and ride the ring to the fold);
+    # quorum_skipped describes the FOLD (0 during warmup)
+    n_dropped: jax.Array = None
+    n_quarantined: jax.Array = None
+    n_retries: jax.Array = None
+    quorum_skipped: jax.Array = None
 
 
 def cohort_capacity(cfg: FedConfig) -> int:
@@ -288,8 +327,10 @@ def sample_cohort_ex(rng, cfg: FedConfig, t=None):
     thin by per-client inclusion probabilities ``clip(S·softmax(logw), 0, 1)``
     under ``participation="bernoulli"``.  ``cfg.dropout_rate`` then drops
     each selected client independently (straggler model) — mask-only, after
-    selection, keeping ≥1 active client.  ``t`` is the round counter (may be
-    traced; only the diurnal process reads it)."""
+    selection, keeping ≥1 active client unless ``cfg.allow_empty_cohort``
+    lets the round come up empty (it degrades to a guarded no-op fold).
+    ``t`` is the round counter (may be traced; only the diurnal process
+    reads it)."""
     cap = cohort_capacity(cfg)
     dropout = float(getattr(cfg, "dropout_rate", 0.0))
     if dropout > 0.0:
@@ -316,15 +357,20 @@ def sample_cohort_ex(rng, cfg: FedConfig, t=None):
             q = jnp.clip(cfg.cohort_size * jax.nn.softmax(logw), 0.0, 1.0)
             draws = jax.random.bernoulli(k_n, q)
         s_raw = jnp.sum(draws).astype(jnp.int32)
-        s = jnp.clip(s_raw, 1, cap)
+        allow_empty = bool(getattr(cfg, "allow_empty_cohort", False))
+        s = jnp.clip(s_raw, 0 if allow_empty else 1, cap)
         mask = jnp.arange(cap) < s
         n_clipped = jnp.maximum(s_raw - cap, 0)
     if dropout > 0.0:
         keep = jax.random.bernoulli(k_drop, 1.0 - dropout, (cap,))
         kept = mask & keep
-        # an all-dropped cohort would make the fold 0/0 — keep one client
-        first = mask & (jnp.arange(cap) == jnp.argmax(mask))
-        mask = jnp.where(jnp.any(kept), kept, first)
+        if getattr(cfg, "allow_empty_cohort", False):
+            # empty rounds degrade to guarded no-op folds — let them happen
+            mask = kept
+        else:
+            # legacy guard: a fully-dropped cohort keeps its first client
+            first = mask & (jnp.arange(cap) == jnp.argmax(mask))
+            mask = jnp.where(jnp.any(kept), kept, first)
     return ids, mask, n_clipped
 
 
@@ -338,6 +384,15 @@ def sample_cohort(rng, cfg: FedConfig, t=None) -> Tuple[jax.Array, jax.Array]:
 def local_learning_rate(cfg: FedConfig, t) -> jax.Array:
     """Appendix C.2: exponential per-round decay of η_l."""
     return jnp.float32(cfg.eta_l) * jnp.float32(cfg.eta_l_decay) ** t.astype(jnp.float32)
+
+
+def _where_tree(ok, new, old):
+    """Per-leaf ``where(ok, new, old)`` — the quorum/no-op-round select.
+    Bitwise inert on healthy rounds: ``jnp.where(True, new, old)`` IS
+    ``new``.  ``None`` (unallocated planes) passes through."""
+    if new is None:
+        return None
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b), new, old)
 
 
 # ----------------------------------------------------------------------
@@ -894,7 +949,8 @@ class FederatedEngine:
 
         def fold_body(planes, wp, n_active, x, m, eta_l):
             return scatter_fold(
-                algo, cfg, planes, wp / n_active, n_active, x, m, eta_l,
+                algo, cfg, planes, wp / jnp.maximum(n_active, 1.0), n_active,
+                x, m, eta_l,
                 discount=discount, axis_name=COHORT_AXIS, n_shards=nsh,
             )
 
@@ -951,6 +1007,98 @@ class FederatedEngine:
         )(planes, wp, n_active)
         return means.get("delta"), means.get("state_delta"), means.get("extra")
 
+    # -------------------------------------------------- fault tolerance
+    def _quorum_ok(self, n_active):
+        """Healthy-round predicate: the server fold applies only when the
+        surviving cohort meets ``max(1, cfg.min_quorum)``.  The floor of 1
+        is the empty-cohort guard (an all-zero weight row used to
+        0/0-poison the masked mean); rounds with n_active ≥ quorum are
+        bitwise unaffected (``where(True, new, old)`` is ``new``)."""
+        return n_active >= jnp.float32(max(1, getattr(self.cfg, "min_quorum", 0)))
+
+    def _inject_faults(self, t, ids, mask, outs):
+        """Apply the configured fault model to one cohort's uplink, between
+        launch and fold.  Returns ``(mask, outs, n_dropped, n_quarantined)``.
+
+        Pure mask/plane transforms (repro.core.faults), keyed by
+        (fault.seed, absolute round t, client id): drops/deadline thin the
+        mask, corruption rewrites delta rows of surviving clients, and the
+        quarantine pass both masks out and SANITIZES (exact-zeros) any
+        non-finite or norm-outlier row — zeroing is load-bearing because a
+        0-weight NaN row still poisons tensordot/scatter reductions.  When
+        ``cfg.fault`` is None nothing here is traced: fault-free programs
+        are bitwise the pre-fault engine's.  Representation-generic over
+        the kernel (C[, pad], P) planes and the jnp/tree (C, leaf…) trees;
+        under cohort sharding the plane ops run on padded rows (pad rows
+        carry mask=False and are never corrupted or counted)."""
+        fault = getattr(self.cfg, "fault", None)
+        zero = jnp.float32(0.0)
+        if fault is None:
+            return mask, outs, zero, zero
+        C = mask.shape[0]
+        # kernel-path planes under cohort sharding carry C_pad rows
+        padded = self._sharded and self.cfg.use_fused_kernel
+
+        def pad_mask(v):
+            return self._pad_cohort(v, mode="zero") if padded else v
+
+        plan = fault_masks(fault, t, ids)
+        n_dropped = zero
+        if fault.drop_rate > 0.0 or fault.deadline > 0.0:
+            n_dropped = jnp.sum((mask & plan.drop).astype(jnp.float32))
+            mask = mask & ~plan.drop
+        if fault.corrupt_rate > 0.0:
+            cmask = pad_mask(plan.corrupt & mask)
+            nkeys = plan.noise_keys
+            if nkeys is not None and padded:
+                nkeys = self._pad_cohort(nkeys)  # edge pad; cmask=False there
+            outs = outs._replace(
+                delta=corrupt_uplink(fault, cmask, nkeys, outs.delta))
+        n_quar = zero
+        if fault.quarantine:
+            rows = (padded_cohort(cohort_capacity(self.cfg),
+                                  self._cohort_shards) if padded else C)
+            fin = (rows_finite(outs.delta, rows)
+                   & rows_finite(outs.state_delta, rows)
+                   & rows_finite(outs.extra, rows))
+            bad = ~fin
+            mask_r = pad_mask(mask)
+            if fault.quarantine_norm_mult > 0.0:
+                norm = jnp.sqrt(rows_sqnorm(outs.delta, rows))
+                act = mask_r & fin
+                med = jnp.nanmedian(jnp.where(act, norm, jnp.nan))
+                bad = bad | (act & (norm > jnp.float32(
+                    fault.quarantine_norm_mult) * med))
+            n_quar = jnp.sum((mask_r & bad).astype(jnp.float32))
+            outs = outs._replace(
+                delta=zero_rows(outs.delta, bad),
+                state_delta=zero_rows(outs.state_delta, bad),
+                extra=zero_rows(outs.extra, bad),
+            )
+            mask = mask & ~(bad[:C] if padded else bad)
+        return mask, outs, n_dropped, n_quar
+
+    def _store_io(self, fn, *args):
+        """Host-store gather/scatter with capped exponential backoff on
+        ``TransientStoreError``.  Returns ``(result, n_retries)``.  Retries
+        re-invoke the SAME pure operation, so a run that needed retries is
+        bitwise-equal to one that didn't."""
+        fault = getattr(self.cfg, "fault", None)
+        if fault is None:
+            return fn(*args), 0
+        attempt = 0
+        while True:
+            try:
+                return fn(*args), attempt
+            except TransientStoreError:
+                if attempt >= fault.store_max_retries:
+                    raise
+                delay = min(float(fault.store_backoff_cap),
+                            float(fault.store_backoff_base) * (2.0 ** attempt))
+                if delay > 0.0:
+                    time.sleep(delay)
+                attempt += 1
+
     def _masked_pmean(self, x, w, n_active):
         """Masked cohort mean of one uplink, reduced straight to a flat
         ``(P,)`` buffer (quantized to ``cfg.aggregate_dtype`` first, like
@@ -965,9 +1113,11 @@ class FederatedEngine:
         agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
 
         def leaf_mean(a):
+            # max(n, 1) guards the empty cohort (0/0 → NaN would poison
+            # params); exact for n ≥ 1, so non-empty rounds are bitwise
             return (
                 jnp.tensordot(w.astype(agg_dt), a.astype(agg_dt), axes=(0, 0))
-                .astype(jnp.float32) / n_active
+                .astype(jnp.float32) / jnp.maximum(n_active, 1.0)
             )
 
         if cfg.use_fused_kernel:  # (C, P) plane
@@ -1005,6 +1155,12 @@ class FederatedEngine:
                 fstate, batches, ids, mask, full_batches, spec, m_t, eta_l
             )
 
+        # fault injection + quarantine sit between launch and fold — a
+        # no-op (untraced) when cfg.fault is None
+        mask, outs, n_dropped, n_quar = self._inject_faults(
+            fstate.server.round, ids, mask, outs
+        )
+
         # masked cohort means, reduced straight to flat (P,) buffers
         # (_masked_pmean; unused planes are None — never materialized,
         # never reduced, where the tree path pays for both)
@@ -1040,6 +1196,20 @@ class FederatedEngine:
                 n_active, eta_l,
             )
 
+        # graceful degradation: a below-quorum (or empty) cohort carries
+        # params/momentum through unchanged — the guarded denominators
+        # already kept the fold finite, the select makes it a no-op (the
+        # round counter still advances; client-state writes are
+        # suppressed via the zeroed scatter weights)
+        ok = self._quorum_ok(n_active)
+        new_params = _where_tree(ok, new_params, x_t)
+        new_server = new_server._replace(
+            momentum=_where_tree(ok, new_server.momentum, fsrv.momentum),
+            second_moment=_where_tree(ok, new_server.second_moment,
+                                      fsrv.second_moment),
+        )
+        w_sc = w * ok.astype(jnp.float32)
+
         # scatter updated client states back (only active cohort members):
         # ONE scatter on the (N, P) plane (kernel path; sharded planes are
         # padded — only real rows scatter) or per-leaf like the tree
@@ -1050,10 +1220,10 @@ class FederatedEngine:
         if algo.needs_client_state:
             if emit_rows:
                 if cfg.use_fused_kernel:
-                    rows_out = cohort_cst + outs.state_delta * w[:, None]
+                    rows_out = cohort_cst + outs.state_delta * w_sc[:, None]
                 else:
                     upd = jax.tree_util.tree_map(
-                        lambda a, d: a + d * w.reshape(
+                        lambda a, d: a + d * w_sc.reshape(
                             (-1,) + (1,) * (d.ndim - 1)
                         ).astype(a.dtype),
                         cohort_cst_tree, outs.state_delta,
@@ -1061,14 +1231,14 @@ class FederatedEngine:
                     rows_out = spec.ravel(upd, batch_dims=1)
             elif self._sharded:
                 C = ids.shape[0]
-                upd = cohort_cst + outs.state_delta[:C] * w[:, None]
+                upd = cohort_cst + outs.state_delta[:C] * w_sc[:, None]
                 new_cst = fstate.client_states.at[ids].set(upd)
             elif cfg.use_fused_kernel:  # (N, P) plane representation
-                upd = cohort_cst + outs.state_delta * w[:, None]
+                upd = cohort_cst + outs.state_delta * w_sc[:, None]
                 new_cst = fstate.client_states.at[ids].set(upd)
             else:
                 def scatter(a, d):
-                    upd = a[ids] + d * w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
+                    upd = a[ids] + d * w_sc.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
                     return a.at[ids].set(upd)
 
                 new_cst = jax.tree_util.tree_map(
@@ -1077,7 +1247,7 @@ class FederatedEngine:
 
         pay = self._payload_from_nbytes(spec.nbytes)
         metrics = RoundMetrics(
-            loss=jnp.sum(losses * wp) / n_active,
+            loss=jnp.sum(losses * wp) / jnp.maximum(n_active, 1.0),
             n_active=n_active,
             delta_norm=_flat_norm(mean_delta),
             momentum_norm=_flat_norm(m_t),
@@ -1086,6 +1256,10 @@ class FederatedEngine:
             bytes_up=n_active * jnp.float32(pay["up_per_client"]),
             n_clipped=(jnp.float32(0.0) if n_clipped is None
                        else n_clipped.astype(jnp.float32)),
+            n_dropped=n_dropped,
+            n_quarantined=n_quar,
+            n_retries=jnp.float32(0.0),
+            quorum_skipped=1.0 - ok.astype(jnp.float32),
         )
         new_state = FedState(new_params, new_server, new_cst, fstate.rng)
         if emit_rows:
@@ -1110,8 +1284,8 @@ class FederatedEngine:
         planes = {"delta": outs.delta, "state_delta": outs.state_delta,
                   "extra": outs.extra}
         new_x, new_m, mean_delta = fused_fold(
-            algo, cfg, planes, w / n_active, n_active, x_t, fsrv.momentum,
-            eta_l, discount=discount,
+            algo, cfg, planes, w / jnp.maximum(n_active, 1.0), n_active,
+            x_t, fsrv.momentum, eta_l, discount=discount,
         )
         return self._close_post(algo, fsrv, new_x, new_m, mean_delta,
                                 n_active, eta_l, discount)
@@ -1153,6 +1327,12 @@ class FederatedEngine:
 
         outs, losses = jax.vmap(one_client)(cohort_cst, batches, full_batches)
 
+        # fault injection + quarantine between launch and fold (untraced
+        # when cfg.fault is None — the oracle stays the oracle)
+        mask, outs, n_dropped, n_quar = self._inject_faults(
+            state.server.round, ids, mask, outs
+        )
+
         # masked cohort mean (bernoulli: only active entries count)
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
@@ -1160,10 +1340,11 @@ class FederatedEngine:
         agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
 
         def mmean(tree):
+            # max(n, 1): empty-cohort guard, exact for n ≥ 1
             return jax.tree_util.tree_map(
                 lambda a: (
                     jnp.tensordot(w.astype(agg_dt), a.astype(agg_dt), axes=(0, 0))
-                    .astype(jnp.float32) / n_active
+                    .astype(jnp.float32) / jnp.maximum(n_active, 1.0)
                 ),
                 tree,
             )
@@ -1177,18 +1358,29 @@ class FederatedEngine:
             n_active, eta_l,
         )
 
+        # below-quorum / empty round → no-op fold (see _flat_round_step)
+        ok = self._quorum_ok(n_active)
+        new_params = _where_tree(ok, new_params, state.params)
+        new_server = new_server._replace(
+            momentum=_where_tree(ok, new_server.momentum,
+                                 state.server.momentum),
+            second_moment=_where_tree(ok, new_server.second_moment,
+                                      state.server.second_moment),
+        )
+        w_sc = w * ok.astype(jnp.float32)
+
         # scatter updated client states back (only active cohort members)
         new_cst = state.client_states
         if algo.needs_client_state:
             def scatter(a, d):
-                upd = a[ids] + d * w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
+                upd = a[ids] + d * w_sc.reshape((-1,) + (1,) * (d.ndim - 1)).astype(a.dtype)
                 return a.at[ids].set(upd)
 
             new_cst = jax.tree_util.tree_map(scatter, state.client_states, outs.state_delta)
 
         pay = self.payload_bytes(state.params)
         metrics = RoundMetrics(
-            loss=jnp.sum(losses * w) / n_active,
+            loss=jnp.sum(losses * w) / jnp.maximum(n_active, 1.0),
             n_active=n_active,
             delta_norm=_tree_norm(mean_delta),
             momentum_norm=_tree_norm(state.server.momentum),
@@ -1197,6 +1389,10 @@ class FederatedEngine:
             bytes_up=n_active * jnp.float32(pay["up_per_client"]),
             n_clipped=(jnp.float32(0.0) if n_clipped is None
                        else n_clipped.astype(jnp.float32)),
+            n_dropped=n_dropped,
+            n_quarantined=n_quar,
+            n_retries=jnp.float32(0.0),
+            quorum_skipped=1.0 - ok.astype(jnp.float32),
         )
         return FedState(new_params, new_server, new_cst, state.rng), metrics
 
@@ -1484,15 +1680,18 @@ class FederatedEngine:
                 mhist = jax.lax.dynamic_update_index_in_dim(
                     mhist, fst.server.momentum, sm, 0
                 )
-            entry, n_active, loss = self._launch_async_cohort(
+            entry, n_active, loss, n_dropped, n_quar = self._launch_async_cohort(
                 fst, m_used, batches, ids, mask, full, spec
             )
             if fold:
                 oldest, pending = ring_push(pending, entry)
-                fst, mean_norm = self._fold_async_slot(fst, oldest, spec, discount)
+                fst, mean_norm, q_skip = self._fold_async_slot(
+                    fst, oldest, spec, discount
+                )
             else:
                 pending = (*pending, entry)
                 mean_norm = jnp.float32(0.0)
+                q_skip = jnp.float32(0.0)
             # round counter is LAUNCH-aligned (η_l schedule stays in step
             # with the sync engine regardless of pipeline fill)
             fst = fst._replace(server=fst.server._replace(round=r0 + 1))
@@ -1507,6 +1706,10 @@ class FederatedEngine:
                 folded=jnp.float32(1.0 if fold else 0.0),
                 eval_acc=in_scan_eval(t, fst.params),
                 n_clipped=n_clipped.astype(jnp.float32),
+                n_dropped=n_dropped,
+                n_quarantined=n_quar,
+                n_retries=jnp.float32(0.0),
+                quorum_skipped=q_skip,
             )
             return fst, pending, mhist, metrics
 
@@ -1554,7 +1757,7 @@ class FederatedEngine:
         # configured overlap)
         discount = float(self.cfg.staleness_discount) ** (pipeline_depth - 1)
         for entry in pending:
-            fstate, _ = self._fold_async_slot(fstate, entry, spec, discount)
+            fstate, _, _ = self._fold_async_slot(fstate, entry, spec, discount)
         return self._unravel_state(fstate, spec)
 
     def _launch_async_cohort(self, fstate: FedState, m_used, batches, ids,
@@ -1569,7 +1772,9 @@ class FederatedEngine:
         (``_masked_pmean``); only the per-client ``state_delta`` plane must
         survive to fold time (the scatter is per-client).
 
-        Returns (entry, n_active, cohort masked-mean loss).
+        Returns (entry, n_active, cohort masked-mean loss, n_dropped,
+        n_quarantined) — the fault counters of the launched cohort (the
+        injected faults ride the ring with the entry).
 
         Cohort-parallel: the pass runs SPMD over the ``"clients"`` axis
         and the ring entry's planes are the PADDED ``(C_pad, P)`` shards
@@ -1590,6 +1795,13 @@ class FederatedEngine:
             outs, losses, _, _ = cohort_pass(
                 fstate, batches, ids, mask, full, spec, m_used, eta_l
             )
+        # faults hit the uplink AT LAUNCH (drops/corruption happen on the
+        # wire, not in the ring): the quarantined/thinned planes then ride
+        # the ring D−1 rounds to their fold, and the jnp pre-reduction
+        # below sees the already-sanitized payload
+        mask, outs, n_dropped, n_quar = self._inject_faults(
+            fstate.server.round, ids, mask, outs
+        )
         w = mask.astype(jnp.float32)
         n_active = jnp.sum(w)
         wp = self._pad_cohort(w, mode="zero") if self._sharded else w
@@ -1612,7 +1824,8 @@ class FederatedEngine:
             w=wp,
             eta_l=eta_l,
         )
-        return entry, n_active, jnp.sum(losses * wp) / n_active
+        loss = jnp.sum(losses * wp) / jnp.maximum(n_active, 1.0)
+        return entry, n_active, loss, n_dropped, n_quar
 
     def _fold_async_slot(self, fstate: FedState, entry: CohortUplink,
                          spec: FlatSpec, discount, fold_rows=None,
@@ -1632,8 +1845,11 @@ class FederatedEngine:
         loop gathers at the same point) and ``emit_rows=True`` returns the
         updated rows instead of scattering into a resident plane.
 
-        Returns (new_fstate, ‖mean Δ‖ of the folded cohort), plus the
-        updated ``(C, P)`` rows when ``emit_rows``."""
+        Returns (new_fstate, ‖mean Δ‖ of the folded cohort,
+        quorum_skipped), plus the updated ``(C, P)`` rows when
+        ``emit_rows``.  Quorum is enforced HERE — at fold time — because
+        the surviving weight row is only final once the faulted entry
+        leaves the ring."""
         cfg, algo = self.cfg, self.algo
         w = entry.w  # (C_pad,) under cohort sharding — pad rows weigh 0
         n_active = jnp.sum(w)
@@ -1689,6 +1905,18 @@ class FederatedEngine:
             )
             new_server = new_server._replace(round=fsrv.round)
 
+        # below-quorum / empty fold → no-op (see _flat_round_step); the
+        # zeroed weights also suppress the client-state writes below
+        ok = self._quorum_ok(n_active)
+        new_params = _where_tree(ok, new_params, x_t)
+        new_server = new_server._replace(
+            momentum=_where_tree(ok, new_server.momentum, fsrv.momentum),
+            second_moment=_where_tree(ok, new_server.second_moment,
+                                      fsrv.second_moment),
+        )
+        w = w * ok.astype(jnp.float32)
+        skipped = 1.0 - ok.astype(jnp.float32)
+
         # scatter the folded cohort's client-state updates (stale entries
         # of non-participants untouched)
         new_cst = fstate.client_states
@@ -1734,8 +1962,8 @@ class FederatedEngine:
 
         new_state = FedState(new_params, new_server, new_cst, fstate.rng)
         if emit_rows:
-            return new_state, _flat_norm(mean_delta), rows_out
-        return new_state, _flat_norm(mean_delta)
+            return new_state, _flat_norm(mean_delta), skipped, rows_out
+        return new_state, _flat_norm(mean_delta), skipped
 
     # -------------------------------------------------- store-backed rounds
     def _store_jits(self, spec: FlatSpec):
@@ -1782,8 +2010,10 @@ class FederatedEngine:
 
         def fold(fst, entry, fold_rows, discount):
             if fold_rows is None:
-                fst, norm = self._fold_async_slot(fst, entry, spec, discount)
-                return fst, norm, None
+                fst, norm, q_skip = self._fold_async_slot(
+                    fst, entry, spec, discount
+                )
+                return fst, norm, q_skip, None
             return self._fold_async_slot(
                 fst, entry, spec, discount, fold_rows=fold_rows, emit_rows=True
             )
@@ -1857,12 +2087,22 @@ class FederatedEngine:
             fstate, batches, ids, mask, full, n_clipped = self._host_sample(
                 jits, fstate, data, device_data
             )
-            rows = jnp.asarray(store.gather(np.asarray(ids))) if stateful else None
+            rows = None
+            retries = 0
+            if stateful:
+                got, r_g = self._store_io(store.gather, np.asarray(ids))
+                rows = jnp.asarray(got)
+                retries += r_g
             fstate, m, new_rows = jits["step"](
                 fstate, batches, ids, mask, full, n_clipped, rows
             )
             if stateful:
-                store.scatter(np.asarray(ids), np.asarray(new_rows))
+                _, r_s = self._store_io(
+                    store.scatter, np.asarray(ids), np.asarray(new_rows)
+                )
+                retries += r_s
+            if retries:  # stamp host-side; device path stamped 0
+                m = m._replace(n_retries=jnp.float32(retries))
             metrics.append(m)
         state = self._unravel_state(fstate, spec)
         return state, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *metrics)
@@ -1871,17 +2111,23 @@ class FederatedEngine:
                    discount: float, store, stateful: bool):
         """Fold one ring entry under the host loop: fold-time store gather
         (mirroring the resident fold's plane gather D−1 rounds after
-        launch), the jitted fold, and the row scatter back."""
+        launch), the jitted fold, and the row scatter back.  Returns
+        (fstate, mean_norm, quorum_skipped, store retries)."""
+        retries = 0
         if stateful:
             ids_np = np.asarray(entry.ids)
-            frows = jnp.asarray(store.gather(ids_np))
-            fstate, mean_norm, new_rows = jits["fold"](
+            got, r_g = self._store_io(store.gather, ids_np)
+            frows = jnp.asarray(got)
+            fstate, mean_norm, q_skip, new_rows = jits["fold"](
                 fstate, entry, frows, discount
             )
-            store.scatter(ids_np, np.asarray(new_rows))
+            _, r_s = self._store_io(store.scatter, ids_np, np.asarray(new_rows))
+            retries = r_g + r_s
         else:
-            fstate, mean_norm, _ = jits["fold"](fstate, entry, None, discount)
-        return fstate, mean_norm
+            fstate, mean_norm, q_skip, _ = jits["fold"](
+                fstate, entry, None, discount
+            )
+        return fstate, mean_norm, q_skip, retries
 
     def run_rounds_store_async(
         self, state: FedState, data, n_rounds: int, *,
@@ -1929,18 +2175,25 @@ class FederatedEngine:
                 sm = t % S
                 m_used = mhist[sm]
                 mhist[sm] = fstate.server.momentum
-            rows = jnp.asarray(store.gather(np.asarray(ids))) if stateful else None
-            entry, n_active, loss = jits["launch"](
+            rows = None
+            retries = 0
+            if stateful:
+                got, r_g = self._store_io(store.gather, np.asarray(ids))
+                rows = jnp.asarray(got)
+                retries += r_g
+            entry, n_active, loss, n_dropped, n_quar = jits["launch"](
                 fstate, m_used, batches, ids, mask, full, rows
             )
             ring.append(entry)
             fold_now = len(ring) >= D
             if fold_now:
-                fstate, mean_norm = self._host_fold(
+                fstate, mean_norm, q_skip, r_f = self._host_fold(
                     jits, fstate, ring.pop(0), discount, store, stateful
                 )
+                retries += r_f
             else:  # pipeline fill: launch-only
                 mean_norm = jnp.float32(0.0)
+                q_skip = jnp.float32(0.0)
             # launch-aligned round counter, as in the resident scan body
             fstate = fstate._replace(
                 server=fstate.server._replace(round=r0 + 1)
@@ -1956,10 +2209,14 @@ class FederatedEngine:
                 folded=jnp.float32(1.0 if fold_now else 0.0),
                 eval_acc=jnp.float32(-1.0),
                 n_clipped=n_clipped.astype(jnp.float32),
+                n_dropped=n_dropped,
+                n_quarantined=n_quar,
+                n_retries=jnp.float32(retries),
+                quorum_skipped=q_skip,
             ))
         if drain:  # flush in-flight cohorts, oldest first
             for entry in ring:
-                fstate, _ = self._host_fold(
+                fstate, _, _, _ = self._host_fold(
                     jits, fstate, entry, discount, store, stateful
                 )
             ring = []

@@ -1,0 +1,150 @@
+"""Fault injection + uplink quarantine primitives (pure mask/plane math).
+
+The fault model lives entirely in :class:`repro.configs.base.FaultConfig`;
+this module turns it into arrays.  Everything here is a pure function of
+``(fault, round, client ids, uplink planes)`` — no engine state, no host
+side effects — so the engine can splice the transforms between cohort
+launch and server fold on every execution path (sync scan, async ring,
+host-store loop) and the same draws can be reproduced independently by
+tests and benchmarks.
+
+Determinism contract: draws are keyed by ``(fault.seed, absolute server
+round t, client id)`` via ``jax.random.fold_in`` chains — NOT by cohort
+slot — so a client's fate in a round is invariant to where the sampler
+placed it, and a kill/resume (the round counter rides the checkpoint)
+replays the identical fault sequence.
+
+Representation-generic: the payload helpers accept either the kernel
+path's ``(C, P)``/``(C_pad, P)`` uplink planes or the jnp/tree paths'
+``(C, leaf…)`` pytrees (they tree_map over leaves; a plane is just a
+one-leaf tree).  ``None`` payloads pass through (the flat engine skips
+unused planes by design).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class FaultPlan(NamedTuple):
+    """Per-(round, client) fault draws for one sampled cohort.
+
+    drop: (C,) bool — uplink lost (drop_rate) or past deadline (straggler)
+    corrupt: (C,) bool — payload arrives corrupted
+    noise_keys: (C,) per-client PRNG keys for "noise" mode, else None
+    """
+
+    drop: jax.Array
+    corrupt: jax.Array
+    noise_keys: Optional[jax.Array]
+
+
+def _per_client_keys(kt, stream: int, ids):
+    """One key per client id for an independent fault stream."""
+    ks = jax.random.fold_in(kt, stream)
+    return jax.vmap(lambda cid: jax.random.fold_in(ks, cid))(ids)
+
+
+def fault_masks(fault, t, ids) -> FaultPlan:
+    """Reproducible per-client fault draws for absolute round ``t``."""
+    C = ids.shape[0]
+    kt = jax.random.fold_in(jax.random.PRNGKey(fault.seed), t)
+    drop = jnp.zeros((C,), bool)
+    if fault.drop_rate > 0.0:
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(
+            _per_client_keys(kt, 1, ids))
+        drop = u < jnp.float32(fault.drop_rate)
+    if fault.deadline > 0.0:
+        # round time ~ LogNormal(0, σ) in units of the median client
+        z = jax.vmap(lambda k: jax.random.normal(k, ()))(
+            _per_client_keys(kt, 2, ids))
+        late = jnp.exp(jnp.float32(fault.straggler_sigma) * z) > jnp.float32(
+            fault.deadline)
+        drop = drop | late
+    corrupt = jnp.zeros((C,), bool)
+    noise_keys = None
+    if fault.corrupt_rate > 0.0:
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(
+            _per_client_keys(kt, 3, ids))
+        corrupt = u < jnp.float32(fault.corrupt_rate)
+        if fault.corrupt_mode == "noise":
+            noise_keys = _per_client_keys(kt, 4, ids)
+    return FaultPlan(drop=drop, corrupt=corrupt, noise_keys=noise_keys)
+
+
+def corrupt_uplink(fault, cmask, noise_keys, x):
+    """Corrupt the rows of payload ``x`` where ``cmask`` is True.
+
+    ``x`` is a (C, P) plane or a (C, leaf…) pytree; rows with
+    ``cmask=False`` pass through bitwise (``jnp.where`` row select).
+    """
+    if x is None:
+        return None
+    mode = fault.corrupt_mode
+    if mode not in ("nan", "inf", "noise"):
+        raise ValueError(
+            f"unknown corrupt_mode {mode!r}; known: nan | inf | noise")
+    leaves, treedef = jax.tree_util.tree_flatten(x)
+    out = []
+    for i, leaf in enumerate(leaves):
+        cm = cmask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        if mode in ("nan", "inf"):
+            fill = jnp.asarray(
+                jnp.nan if mode == "nan" else jnp.inf, leaf.dtype)
+            out.append(jnp.where(cm, fill, leaf))
+        else:
+            lkeys = jax.vmap(lambda k, i=i: jax.random.fold_in(k, i))(
+                noise_keys)
+            noise = jax.vmap(
+                lambda k, s=leaf.shape[1:]: jax.random.normal(k, s,
+                                                              jnp.float32)
+            )(lkeys)
+            noisy = leaf + (jnp.float32(fault.noise_scale)
+                            * jnp.abs(leaf.astype(jnp.float32))
+                            * noise).astype(leaf.dtype)
+            out.append(jnp.where(cm, noisy, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def rows_finite(x, C: int) -> jax.Array:
+    """(C,) bool: is every element of client c's payload rows finite?
+
+    ``None`` payloads are vacuously finite (all-True).
+    """
+    ok = jnp.ones((C,), bool)
+    if x is None:
+        return ok
+    for leaf in jax.tree_util.tree_leaves(x):
+        ok = ok & jnp.all(jnp.isfinite(leaf),
+                          axis=tuple(range(1, leaf.ndim)))
+    return ok
+
+
+def rows_sqnorm(x, C: int) -> jax.Array:
+    """(C,) f32: squared L2 norm of each client's payload rows."""
+    s = jnp.zeros((C,), jnp.float32)
+    if x is None:
+        return s
+    for leaf in jax.tree_util.tree_leaves(x):
+        s = s + jnp.sum(jnp.square(leaf.astype(jnp.float32)),
+                        axis=tuple(range(1, leaf.ndim)))
+    return s
+
+
+def zero_rows(x, bad):
+    """Sanitize quarantined rows to exact zeros in every leaf.
+
+    Zeroing (not just down-weighting) is load-bearing: a NaN row with
+    weight 0 still poisons ``tensordot``/scatter reductions because
+    0·NaN = NaN; an exact-zero row contributes ±0, which adding preserves
+    sums bitwise.
+    """
+    if x is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.where(
+            bad.reshape((-1,) + (1,) * (leaf.ndim - 1)),
+            jnp.zeros((), leaf.dtype), leaf),
+        x)

@@ -272,9 +272,11 @@ def cohort_mean_scatter(plane, w, n_active, axis_name: str, n_shards: int,
     """
     Pn = plane.shape[-1]
     cols = cohort_to_columns(plane, axis_name, n_shards)
+    # max(n, 1) guards the empty cohort (0/0 would NaN-poison the fold);
+    # exact for n ≥ 1, so non-empty rounds stay bitwise
     mean = (
         jnp.tensordot(w.astype(agg_dtype), cols.astype(agg_dtype), axes=(0, 0))
-        .astype(jnp.float32) / n_active
+        .astype(jnp.float32) / jnp.maximum(n_active, 1.0)
     )
     return gather_plane(mean, axis_name, Pn)
 

@@ -6,8 +6,10 @@ from repro.data.synthetic import (
 )
 from repro.data.pipeline import FederatedData, lm_batch_iterator
 from repro.data.population import (
+    FaultyStore,
     HostPopulationStore,
     StreamingClientData,
+    TransientStoreError,
     availability_log_weights,
     make_population_store,
 )
@@ -21,8 +23,10 @@ __all__ = [
     "make_synthetic_lm",
     "FederatedData",
     "lm_batch_iterator",
+    "FaultyStore",
     "HostPopulationStore",
     "StreamingClientData",
+    "TransientStoreError",
     "availability_log_weights",
     "make_population_store",
 ]

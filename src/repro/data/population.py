@@ -174,16 +174,65 @@ class HostPopulationStore:
         return store
 
 
+class TransientStoreError(RuntimeError):
+    """A host-store gather/scatter failed transiently (injected or real).
+
+    The engine's retry contract (``FaultConfig.store_max_retries`` /
+    ``store_backoff_base`` / ``store_backoff_cap``): retry the SAME pure
+    operation with capped exponential backoff, re-raise once retries are
+    exhausted.  Retries never change math — a run that needed them is
+    bitwise-equal to one that didn't."""
+
+
+class FaultyStore:
+    """Deterministic chaos wrapper around a population store: each
+    ``gather``/``scatter`` call independently raises
+    :class:`TransientStoreError` with ``failure_rate`` probability BEFORE
+    delegating (a failed call has no side effects, so retrying is safe).
+    The failure stream is host-side ``numpy`` RNG — each retry consumes a
+    fresh draw, so a retried operation eventually succeeds.  Everything
+    else (``touched``/``nbytes``/``to_pytree``/…) passes through to the
+    wrapped store via ``inner``."""
+
+    def __init__(self, inner: HostPopulationStore, failure_rate: float,
+                 seed: int = 0):
+        self.inner = inner
+        self.failure_rate = float(failure_rate)
+        self._rng = np.random.default_rng((int(seed), 0xFA17))
+
+    def _maybe_fail(self, op: str) -> None:
+        if self._rng.random() < self.failure_rate:
+            raise TransientStoreError(f"injected transient store {op} failure")
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        self._maybe_fail("gather")
+        return self.inner.gather(ids)
+
+    def scatter(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        self._maybe_fail("scatter")
+        return self.inner.scatter(ids, rows)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
 def make_population_store(cfg, plane_size: int) -> Optional[HostPopulationStore]:
-    """Store instance for ``cfg.population_store`` — ``None`` for resident."""
+    """Store instance for ``cfg.population_store`` — ``None`` for resident.
+    When ``cfg.fault`` injects transient store failures the store comes
+    back wrapped in :class:`FaultyStore` (the engine retries through it)."""
     kind = getattr(cfg, "population_store", "resident")
     if kind == "resident":
         return None
-    if kind == "host":
-        return HostPopulationStore(cfg.num_clients, plane_size)
-    raise ValueError(
-        f"unknown population_store {kind!r}; known: {POPULATION_STORES}"
-    )
+    if kind != "host":
+        raise ValueError(
+            f"unknown population_store {kind!r}; known: {POPULATION_STORES}"
+        )
+    store = HostPopulationStore(cfg.num_clients, plane_size)
+    fault = getattr(cfg, "fault", None)
+    if fault is not None and getattr(fault, "store_failure_rate", 0.0) > 0.0:
+        return FaultyStore(store, fault.store_failure_rate,
+                           seed=getattr(fault, "seed", 0))
+    return store
 
 
 # ----------------------------------------------------------------------

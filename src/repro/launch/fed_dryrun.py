@@ -155,7 +155,9 @@ def build_and_lower(
 
     metrics_spec = jax.tree_util.tree_map(lambda _: P(), {
         "loss": 0, "n_active": 0, "delta_norm": 0, "momentum_norm": 0,
-        "eta_l": 0, "bytes_down": 0, "bytes_up": 0, "n_clipped": 0})
+        "eta_l": 0, "bytes_down": 0, "bytes_up": 0, "n_clipped": 0,
+        "n_dropped": 0, "n_quarantined": 0, "n_retries": 0,
+        "quorum_skipped": 0})
     from repro.core.engine import RoundMetrics
     fn = jax.jit(
         eng._round_step_impl,

@@ -41,6 +41,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 from pathlib import Path
 
 import numpy as np
@@ -48,7 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FedConfig
+from repro.checkpoint import latest_step, load_fed_run, save_fed_run
+from repro.configs.base import FaultConfig, FedConfig
 from repro.core import (
     FederatedEngine,
     describe_algorithm,
@@ -82,8 +84,20 @@ def run_federated(
     echo: bool = True,
     fused: bool = True,
     async_pipeline: bool = False,
+    ckpt_every: int = 0,
+    ckpt_dir: str = "",
+    resume: bool = False,
+    die_after: int = 0,
 ):
-    """Returns (final_test_acc, history MetricLogger)."""
+    """Returns (final_test_acc, history MetricLogger).
+
+    ``ckpt_every`` > 0 publishes an atomic whole-run snapshot (FedState +
+    host population store, one ``save_fed_run`` file) every N rounds on
+    the fused path; ``resume`` restores the latest snapshot from
+    ``ckpt_dir`` and CONTINUES the trajectory bitwise (same fused-scan
+    chunking relative to absolute round).  ``die_after`` R kills the
+    process with exit code 75 right after the first snapshot at round
+    ≥ R — the chaos half of the kill-and-resume CI smoke."""
     if cfg.population_store == "host":
         # out-of-core path: no (N, n_per, …) device stack exists — shards
         # regenerate on demand per sampled cohort (label skew replaces the
@@ -149,8 +163,28 @@ def run_federated(
         # eval_every rounds per jitted scan; metrics come back stacked and
         # we log the chunk's final round (same cadence as the --per-round path)
         r = 0
+        if resume:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"--resume: no checkpoints in {ckpt_dir!r}")
+            state, population, meta = load_fed_run(
+                ckpt_dir, step, state, num_clients=cfg.num_clients
+            )
+            if population is not None and eng.population is not None:
+                # restore INTO the engine's store, bypassing any chaos
+                # wrapper (FaultyStore) so the restore itself cannot fail
+                getattr(eng.population, "inner", eng.population)._rows = (
+                    population._rows
+                )
+            r = int(meta["step"])
         while r < cfg.rounds:
             chunk = min(eval_every, cfg.rounds - r)
+            if ckpt_every > 0:
+                # align scan chunks to snapshot boundaries so a resumed run
+                # replays the SAME chunking relative to absolute round —
+                # bitwise continuation needs identical scan programs
+                nxt = ckpt_every * (r // ckpt_every + 1)
+                chunk = min(chunk, nxt - r)
             state, ms = eng.run_rounds(state, data, chunk)
             r += chunk
             acc = evaluate(state.params, x_te_j, y_te_j)
@@ -158,6 +192,16 @@ def run_federated(
                     test_acc=round(acc, 4), n_active=int(ms.n_active[-1]),
                     mb_down=round(float(ms.bytes_down[-1]) / 2**20, 2),
                     mb_up=round(float(ms.bytes_up[-1]) / 2**20, 2))
+            if ckpt_every > 0 and (r % ckpt_every == 0 or r >= cfg.rounds):
+                pop = eng.population
+                save_fed_run(
+                    ckpt_dir, r, state,
+                    population=getattr(pop, "inner", pop) if pop is not None else None,
+                )
+                if die_after > 0 and r >= die_after:
+                    # simulate preemption: no cleanup, no atexit — the
+                    # snapshot just published is all a resume may rely on
+                    os._exit(75)
         return acc, log
     for r in range(cfg.rounds):
         state, m = eng.run_round(state, data)
@@ -266,6 +310,57 @@ def build_parser() -> argparse.ArgumentParser:
                          "('clients',) mesh; each device runs C/N clients "
                          "end-to-end and the fold is a reduce-scatter). "
                          "Requires --fused-kernel; 0 = single-device")
+    # ---- fault tolerance (ISSUE PR-7): faults are CONFIG DATA ----------
+    fault = ap.add_argument_group(
+        "fault injection / degradation",
+        "any nonzero rate builds a FaultConfig (faults as pure config "
+        "data, seeded and reproducible); quarantine of non-finite uplinks "
+        "is always on when a FaultConfig is present")
+    fault.add_argument("--fault-drop-rate", type=float, default=0.0,
+                       help="per-client per-round uplink drop probability")
+    fault.add_argument("--fault-corrupt-rate", type=float, default=0.0,
+                       help="per-client per-round payload corruption probability")
+    fault.add_argument("--fault-corrupt-mode", default="nan",
+                       choices=["nan", "inf", "noise"],
+                       help="corruption model: NaN/Inf plane fill, or scaled "
+                            "bit-noise added to the delta plane")
+    fault.add_argument("--fault-noise-scale", type=float, default=1.0,
+                       help="noise corruption magnitude (x |leaf| stddev)")
+    fault.add_argument("--fault-deadline", type=float, default=0.0,
+                       help="straggler deadline (log-normal compute-time "
+                            "model; >0 drops clients exceeding it)")
+    fault.add_argument("--fault-store-failure-rate", type=float, default=0.0,
+                       help="transient host-store gather/scatter failure "
+                            "probability (engine retries with capped "
+                            "exponential backoff)")
+    fault.add_argument("--fault-seed", type=int, default=0,
+                       help="seed of the fault PRNG chain (independent of "
+                            "--seed; same seed => same fault realization)")
+    fault.add_argument("--quarantine-norm-mult", type=float, default=0.0,
+                       help=">0 additionally quarantines uplinks whose delta "
+                            "norm exceeds mult x cohort median")
+    ap.add_argument("--min-quorum", type=int, default=0,
+                    help="skip the server fold (params carried unchanged) "
+                         "when surviving clients fall below this count")
+    ap.add_argument("--allow-empty-cohort", action="store_true",
+                    help="let dropout empty the cohort entirely (the fold "
+                         "degrades to a guarded no-op round) instead of the "
+                         "legacy keep-first-client guard")
+    # ---- preemption-safe runs ------------------------------------------
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="publish an atomic whole-run snapshot (FedState + "
+                         "host population store) every N rounds; fused "
+                         "path only")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="snapshot directory (required with --ckpt-every / "
+                         "--resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot from --ckpt-dir and "
+                         "continue the trajectory bitwise")
+    ap.add_argument("--die-after", type=int, default=0,
+                    help="chaos: exit(75) right after the first snapshot at "
+                         "round >= N (pair with --resume in a second "
+                         "invocation)")
     ap.add_argument("--dryrun", action="store_true",
                     help="resolve + persist the config artifact and exit "
                          "without training")
@@ -277,6 +372,23 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
     the dryrun artifact (and tests/test_fed_train_cli.py) assert the
     resolved values, which is what caught ``use_flat_plane`` silently
     falling back to its default."""
+    # faults are pure config data: any nonzero rate materializes a
+    # FaultConfig; all-defaults keeps fault=None — the engine's injection
+    # code then never traces, preserving the bitwise-vs-pre-PR contract
+    fault = None
+    if (args.fault_drop_rate > 0.0 or args.fault_corrupt_rate > 0.0
+            or args.fault_deadline > 0.0 or args.fault_store_failure_rate > 0.0
+            or args.quarantine_norm_mult > 0.0):
+        fault = FaultConfig(
+            drop_rate=args.fault_drop_rate,
+            deadline=args.fault_deadline,
+            corrupt_rate=args.fault_corrupt_rate,
+            corrupt_mode=args.fault_corrupt_mode,
+            noise_scale=args.fault_noise_scale,
+            store_failure_rate=args.fault_store_failure_rate,
+            quarantine_norm_mult=args.quarantine_norm_mult,
+            seed=args.fault_seed,
+        )
     return FedConfig(
         algo=args.algo, num_clients=args.clients, cohort_size=args.cohort,
         local_steps=args.local_steps, alpha=args.alpha, eta_l=args.eta_l,
@@ -290,6 +402,9 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
         availability=args.availability,
         zipf_exponent=args.zipf_exponent,
         dropout_rate=args.dropout_rate,
+        fault=fault,
+        min_quorum=args.min_quorum,
+        allow_empty_cohort=args.allow_empty_cohort,
     )
 
 
@@ -306,6 +421,20 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
     assert cfg.population_store == args.population_store
     assert cfg.availability == args.availability
     assert cfg.dropout_rate == args.dropout_rate
+    assert cfg.min_quorum == args.min_quorum
+    assert cfg.allow_empty_cohort == args.allow_empty_cohort
+    if (args.fault_drop_rate > 0.0 or args.fault_corrupt_rate > 0.0
+            or args.fault_deadline > 0.0 or args.fault_store_failure_rate > 0.0
+            or args.quarantine_norm_mult > 0.0):
+        assert cfg.fault is not None
+        assert cfg.fault.drop_rate == args.fault_drop_rate
+        assert cfg.fault.corrupt_rate == args.fault_corrupt_rate
+        assert cfg.fault.corrupt_mode == args.fault_corrupt_mode
+        assert cfg.fault.deadline == args.fault_deadline
+        assert cfg.fault.store_failure_rate == args.fault_store_failure_rate
+        assert cfg.fault.seed == args.fault_seed
+    else:
+        assert cfg.fault is None
     payload = {
         "resolved_config": dataclasses.asdict(cfg),
         "engine_mode": (
@@ -315,6 +444,7 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
         ),
         "eval_every": args.eval_every,
         "dirichlet": args.dirichlet,
+        "ckpt_every": args.ckpt_every,
         # the mesh the engine would build for cfg.cohort_shard — recorded
         # so CI (which runs dryrun single-device AND multi-device) asserts
         # the flag actually reaches the mesh constructor
@@ -353,6 +483,18 @@ def main(argv=None) -> int:
     if args.population_store == "host" and args.cohort_shard > 0:
         ap.error("--population-store host is a single-device host loop; "
                  "it does not compose with --cohort-shard yet")
+    if args.ckpt_every > 0 and use_async:
+        ap.error("--ckpt-every snapshots between fused-scan chunks; the "
+                 "async pipelined engine is one uninterruptible scan — "
+                 "drop --async / --pipeline-depth / --staleness")
+    if args.ckpt_every > 0 and args.per_round:
+        ap.error("--ckpt-every rides the fused chunk loop — drop --per-round")
+    if (args.ckpt_every > 0 or args.resume) and not args.ckpt_dir:
+        ap.error("--ckpt-every / --resume need --ckpt-dir")
+    if args.die_after > 0 and args.ckpt_every <= 0:
+        ap.error("--die-after kills AFTER a snapshot — add --ckpt-every")
+    if args.resume and args.ckpt_every <= 0:
+        ap.error("--resume continues a snapshotted run — add --ckpt-every")
     cfg = resolve_config(args)
     if args.dryrun:
         path = write_dryrun_artifact(cfg, args)
@@ -360,7 +502,9 @@ def main(argv=None) -> int:
         return 0
     acc, _ = run_federated(cfg, args.dirichlet, eval_every=args.eval_every,
                            seed=args.seed, fused=not args.per_round,
-                           async_pipeline=use_async)
+                           async_pipeline=use_async,
+                           ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                           resume=args.resume, die_after=args.die_after)
     print(f"\n{args.algo}: final test accuracy = {acc:.4f}")
     return 0
 

@@ -130,6 +130,64 @@ def test_list_algos_prints_registry(capsys):
     assert "client_state" in out  # state-plane requirements rendered
 
 
+def test_fault_flags_wire_through():
+    """Fault knobs land on cfg.fault as a FaultConfig; all-defaults keeps
+    fault=None (the bitwise-preserved engine)."""
+    assert _resolved([]).fault is None
+    cfg = _resolved(["--fault-drop-rate", "0.2", "--fault-corrupt-rate",
+                     "0.05", "--fault-corrupt-mode", "inf",
+                     "--fault-deadline", "2.0",
+                     "--fault-store-failure-rate", "0.1",
+                     "--fault-seed", "7"])
+    assert cfg.fault is not None
+    assert cfg.fault.drop_rate == pytest.approx(0.2)
+    assert cfg.fault.corrupt_rate == pytest.approx(0.05)
+    assert cfg.fault.corrupt_mode == "inf"
+    assert cfg.fault.deadline == pytest.approx(2.0)
+    assert cfg.fault.store_failure_rate == pytest.approx(0.1)
+    assert cfg.fault.seed == 7
+    # any single nonzero knob materializes the config
+    assert _resolved(["--quarantine-norm-mult", "5.0"]).fault is not None
+
+
+def test_quorum_and_empty_cohort_flags_wire_through():
+    assert _resolved([]).min_quorum == 0
+    assert _resolved([]).allow_empty_cohort is False
+    cfg = _resolved(["--min-quorum", "3", "--allow-empty-cohort"])
+    assert cfg.min_quorum == 3 and cfg.allow_empty_cohort is True
+
+
+def test_fault_flags_reach_dryrun_artifact(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    rc = main(["--dryrun", "--fault-drop-rate", "0.3",
+               "--fault-corrupt-rate", "0.02", "--min-quorum", "2",
+               "--ckpt-every", "10", "--ckpt-dir", str(tmp_path)])
+    assert rc == 0
+    got = json.loads(art.read_text())
+    rc_cfg = got["resolved_config"]
+    assert rc_cfg["fault"]["drop_rate"] == pytest.approx(0.3)
+    assert rc_cfg["fault"]["corrupt_rate"] == pytest.approx(0.02)
+    assert rc_cfg["min_quorum"] == 2
+    assert got["ckpt_every"] == 10
+    # no fault flags → fault stays null in the artifact
+    assert main(["--dryrun"]) == 0
+    assert json.loads(art.read_text())["resolved_config"]["fault"] is None
+
+
+def test_ckpt_flag_validations():
+    """Snapshot flags constrain each other: ckpt needs a dir and the fused
+    chunk loop; die-after/resume need ckpt-every."""
+    for argv in (["--ckpt-every", "5"],                      # no --ckpt-dir
+                 ["--ckpt-every", "5", "--ckpt-dir", "/tmp/x", "--async"],
+                 ["--ckpt-every", "5", "--ckpt-dir", "/tmp/x", "--per-round"],
+                 ["--die-after", "5", "--ckpt-dir", "/tmp/x"],  # no ckpt-every
+                 ["--resume", "--ckpt-dir", "/tmp/x"]):
+        with pytest.raises(SystemExit) as e:
+            main(argv + ["--dryrun"])
+        assert e.value.code == 2
+
+
 def test_dryrun_artifact_default_mode(tmp_path, monkeypatch):
     art = tmp_path / "fed_train_dryrun.json"
     monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
