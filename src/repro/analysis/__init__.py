@@ -1,0 +1,19 @@
+"""Static guarantees for the engine's conventions.
+
+Two layers, one contract: the invariants that keep the federated engine
+correct — registry-only algorithm dispatch, compat-routed jax APIs, no
+host syncs inside the fused scan, disciplined RNG keying, f32
+accumulation — are enforced as *code*, not reviewer folklore.
+
+* :mod:`repro.analysis.lint` — Layer 1, an AST linter over ``src/repro``
+  (rules REP001–REP005, inline ``# repro: noqa`` suppression, checked-in
+  baseline).  ``python -m repro.analysis.lint``.
+* :mod:`repro.analysis.trace` — Layer 2, a traced-program contract
+  checker that lowers the real round programs and asserts donation
+  aliasing, transfer-guard cleanliness, the retrace budget, scan-carry
+  dtypes, and the ordered scattered fold.
+  ``python -m repro.analysis.trace --quick``.
+
+Both are CI-blocking (the ``static-analysis`` job in
+``.github/workflows/ci.yml``).
+"""

@@ -1,0 +1,892 @@
+"""Layer 1 — AST lint: repo invariants as executable rules (REP001–005).
+
+The engine's correctness conventions are encoded as AST rules over
+``src/repro``.  Each rule carries an ID and a docstring whose first line
+is the invariant and whose body opens with the rationale; the README
+rule table is generated from exactly those docstrings
+(``python -m repro.analysis.lint --write``, byte-agreement enforced by
+``tests/test_analysis.py``).
+
+Suppression: a finding is silenced by an inline comment **on the same
+line**, with a mandatory justification::
+
+    ids = np.asarray(dev_ids)  # repro: noqa REP003 -- host loop boundary
+
+Reason-less ``noqa`` comments are ignored — a suppression without a
+justification is itself a convention violation.
+
+Grandfathered findings live in ``src/repro/analysis/baseline.txt``
+(regenerate with ``--baseline``); the CLI exits non-zero only on
+findings absent from the baseline, so CI blocks on *new* violations
+while the shipped baseline stays empty or justified line-by-line.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+REPO_SRC = Path(__file__).resolve().parents[2]  # .../src
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.txt"
+README_PATH = Path(__file__).resolve().parent / "README.md"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*noqa\s+(?P<ids>REP\d{3}(?:\s*,\s*REP\d{3})*)\s*--\s*(?P<reason>\S.*)$"
+)
+
+
+# ------------------------------------------------------------------ model
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # posix, repo-relative (or the virtual path given to lint_sources)
+    line: int
+    col: int
+    message: str
+    line_text: str
+
+    @property
+    def baseline_key(self) -> str:
+        # keyed on content, not line number, so unrelated edits above a
+        # grandfathered line don't churn the baseline
+        return f"{self.path}::{self.rule}::{self.line_text.strip()}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class ParsedModule:
+    """One source file: AST + parent links + import map + suppressions."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.imports = _import_map(self.tree)
+        self.suppressions: Dict[int, Tuple[set, str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                ids = {s.strip() for s in m.group("ids").split(",")}
+                self.suppressions[i] = (ids, m.group("reason").strip())
+
+    @property
+    def dotted(self) -> str:
+        """Module import path, derived from the file path (``repro.…``)."""
+        parts = Path(self.path).with_suffix("").parts
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def line_text(self, lineno: int) -> str:
+        return self.lines[lineno - 1] if 0 < lineno <= len(self.lines) else ""
+
+    def suppressed(self, rule: str, lineno: int) -> bool:
+        sup = self.suppressions.get(lineno)
+        return bool(sup and rule in sup[0])
+
+
+def _import_map(tree: ast.Module) -> Dict[str, str]:
+    """Local alias → fully dotted path (``jnp`` → ``jax.numpy``)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _dotted(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain to a dotted path through the import map."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(imports.get(node.id, node.id))
+        return ".".join(reversed(parts))
+    return None
+
+
+def _region(fn: ast.AST) -> Iterator[ast.AST]:
+    """All nodes of ``fn``'s body without descending into nested defs
+    (nested functions are separate call-graph nodes; lambdas are part of
+    the enclosing region)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+# ------------------------------------------------------------------ rules
+class Rule:
+    id: str = "REP000"
+    scope_doc: str = "src/repro"
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, mod: ParsedModule, ctx: "RepoContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, mod: ParsedModule, node: ast.AST, message: str) -> Finding:
+        return Finding(self.id, mod.path, node.lineno, node.col_offset,
+                       message, mod.line_text(node.lineno))
+
+
+class REP001(Rule):
+    """No name-keyed algorithm branches in ``core/``, ``kernels/``, ``sharding/``.
+
+    Algorithms are ``AlgorithmSpec`` data; the registry is the only
+    dispatch point.  A ``cfg.algo == "fedcm"`` branch in the engine or
+    kernels silently diverges the moment a new spec registers, so any
+    comparison of an ``algo``-named value against string literals is a
+    finding.  Replaces the ad-hoc ``grep 'algo =='`` convention check.
+    """
+
+    id = "REP001"
+    scope_doc = "core/, kernels/, sharding/"
+
+    def applies(self, path: str) -> bool:
+        return any(seg in path for seg in ("/core/", "/kernels/", "/sharding/"))
+
+    @staticmethod
+    def _algoish(node: ast.AST, imports: Dict[str, str]) -> bool:
+        d = _dotted(node, imports)
+        if not d:
+            return False
+        return any(p in ("algo", "algo_name", "algorithm") for p in d.split("."))
+
+    @staticmethod
+    def _has_str(node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, str)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(REP001._has_str(e) for e in node.elts)
+        return False
+
+    def check(self, mod, ctx):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            ok_ops = (ast.Eq, ast.NotEq, ast.In, ast.NotIn)
+            if not all(isinstance(op, ok_ops) for op in node.ops):
+                continue
+            sides = [node.left] + list(node.comparators)
+            if any(self._algoish(s, mod.imports) for s in sides) and any(
+                self._has_str(s) for s in sides
+            ):
+                yield self.finding(
+                    mod, node,
+                    "name-keyed algorithm branch — dispatch through the "
+                    "AlgorithmSpec registry, not algo-name strings",
+                )
+
+
+class REP002(Rule):
+    """Version-sensitive jax APIs must route through ``utils/compat.py``.
+
+    ``set_mesh`` / ``shard_map`` / mesh constructors moved or were
+    renamed across jax releases; ``utils/compat.py`` resolves the
+    installed spelling per call.  A direct call anywhere else reverts to
+    hand-rolled version checks and breaks on the next jax pin bump.
+    """
+
+    id = "REP002"
+    scope_doc = "src/repro (except utils/compat.py)"
+
+    BANNED = {
+        "jax.set_mesh": "compat.set_mesh",
+        "jax.sharding.use_mesh": "compat.set_mesh",
+        "jax.shard_map": "compat.shard_map",
+        "jax.experimental.shard_map.shard_map": "compat.shard_map",
+        "jax.make_mesh": "compat.make_mesh",
+        "jax.experimental.mesh_utils.create_device_mesh": "compat.make_mesh",
+        "jax.sharding.Mesh": "compat.device_mesh",
+        "jax.interpreters.pxla.Mesh": "compat.device_mesh",
+    }
+
+    def applies(self, path: str) -> bool:
+        return not path.endswith("utils/compat.py")
+
+    def check(self, mod, ctx):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func, mod.imports)
+            repl = self.BANNED.get(d or "")
+            if repl:
+                yield self.finding(
+                    mod, node,
+                    f"direct call to version-sensitive `{d}` — use "
+                    f"`repro.utils.{repl}` instead",
+                )
+
+
+class REP003(Rule):
+    """No host-sync calls inside functions jitted or scanned by the engine.
+
+    A ``.item()`` / ``float(traced)`` / ``np.asarray`` / ``print``
+    inside the fused ``lax.scan`` either fails to trace or, worse,
+    silently freezes a traced value at trace time.  The rule resolves
+    the jit/scan call graph (``jax.jit`` decorators and call sites,
+    ``lax.scan``/``cond``/``vmap``/``shard_map`` function arguments,
+    nested defs) and walks every reachable function.  ``float``/``int``/
+    ``bool`` of static config attributes (``cfg.x``, ``getattr(cfg, …)``)
+    is exempt — those are Python values at trace time.
+    """
+
+    id = "REP003"
+    scope_doc = "functions reachable from jit/scan roots (repo-wide graph)"
+
+    BANNED_DOTTED = {
+        "numpy.asarray": "np.asarray",
+        "numpy.array": "np.array",
+        "jax.device_get": "jax.device_get",
+        "time.sleep": "time.sleep",
+    }
+    CASTS = {"float", "int", "bool"}
+    STATIC_CALLS = {"getattr", "len", "min", "max", "abs", "round", "pow"}
+
+    @classmethod
+    def _static_arg(cls, node: ast.AST) -> bool:
+        """Conservatively: does this expression look like a trace-time
+        Python value (config attribute chains, literals) rather than a
+        traced array?"""
+        if isinstance(node, (ast.Constant, ast.Attribute)):
+            return True
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute):
+                # math.* raises on tracers, so a math.* result is static
+                # by construction
+                return (isinstance(node.func.value, ast.Name)
+                        and node.func.value.id == "math")
+            return isinstance(node.func, ast.Name) and node.func.id in cls.STATIC_CALLS
+        if isinstance(node, ast.BinOp):
+            return cls._static_arg(node.left) and cls._static_arg(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return cls._static_arg(node.operand)
+        if isinstance(node, ast.IfExp):
+            return all(cls._static_arg(n)
+                       for n in (node.body, node.test, node.orelse))
+        return False
+
+    def check(self, mod, ctx):
+        for key in ctx.reachable:
+            fpath, _ = key
+            if fpath != mod.path:
+                continue
+            fn = ctx.functions[key].node
+            for node in _region(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "item":
+                    yield self.finding(
+                        mod, node,
+                        ".item() host-syncs inside a traced function",
+                    )
+                    continue
+                d = _dotted(f, mod.imports)
+                if d in self.BANNED_DOTTED:
+                    yield self.finding(
+                        mod, node,
+                        f"`{self.BANNED_DOTTED[d]}` host-syncs inside a "
+                        "traced function",
+                    )
+                    continue
+                if isinstance(f, ast.Name):
+                    if f.id == "print":
+                        yield self.finding(
+                            mod, node,
+                            "print() inside a traced function (use "
+                            "jax.debug.print if intentional)",
+                        )
+                    elif (f.id in self.CASTS and node.args
+                          and not self._static_arg(node.args[0])):
+                        yield self.finding(
+                            mod, node,
+                            f"{f.id}() on a (potentially) traced value "
+                            "host-syncs; keep it, cast with .astype, or "
+                            "mark static config reads as attributes",
+                        )
+
+
+class REP004(Rule):
+    """Every ``jax.random`` draw consumes a ``split``/``fold_in`` key, never a reused one.
+
+    Reusing a key across two draws silently correlates streams that must
+    stay independent (cohort sampling, fault realization, batch choice);
+    drawing from a stored raw key (``state.rng``) makes
+    the round non-reproducible under resume.  Tracks per-function key
+    bindings (branch-aware; loop bodies are analyzed twice to catch
+    cross-iteration reuse) and flags reused or raw-attribute keys.
+    """
+
+    id = "REP004"
+    scope_doc = "src/repro"
+
+    PRODUCERS = {"split", "fold_in", "PRNGKey", "key", "clone"}
+    NON_DRAWS = PRODUCERS | {"wrap_key_data", "key_data", "key_impl", "bits_dtype"}
+
+    def _rand_name(self, node: ast.Call, imports) -> Optional[str]:
+        d = _dotted(node.func, imports)
+        if d and d.startswith("jax.random."):
+            return d.split(".")[-1]
+        return None
+
+    def check(self, mod, ctx):
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                parent = mod.parents.get(node)
+                if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                       ast.Lambda)):
+                    continue  # handled by its top-level enclosing function
+                self._check_fn(mod, node, out)
+        yield from out
+
+    # -- per-function abstract interpretation ------------------------------
+    def _check_fn(self, mod, fn, out):
+        env: Dict[str, int] = {}  # key var -> draws consumed since binding
+        sub: Dict[Tuple[str, object], int] = {}  # (key array var, index) -> draws
+        args = fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            env[a.arg] = 0
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+        self._stmts(mod, body, env, sub, out)
+
+    def _stmts(self, mod, stmts, env, sub, out):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_fn(mod, st, out)
+            elif isinstance(st, ast.Assign):
+                self._expr(mod, st.value, env, sub, out)
+                for tgt in st.targets:
+                    self._bind(mod, tgt, st.value, env, sub)
+            elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+                if st.value is not None:
+                    self._expr(mod, st.value, env, sub, out)
+                    self._bind(mod, st.target, st.value, env, sub)
+            elif isinstance(st, ast.If):
+                self._expr(mod, st.test, env, sub, out)
+                e1, s1 = dict(env), dict(sub)
+                self._stmts(mod, st.body, env, sub, out)
+                self._stmts(mod, st.orelse, e1, s1, out)
+                for k, v in e1.items():  # merge: worst (max) consumption
+                    env[k] = max(env.get(k, v), v)
+                for k, v in s1.items():
+                    sub[k] = max(sub.get(k, v), v)
+            elif isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+                if isinstance(st, (ast.For, ast.AsyncFor)):
+                    self._expr(mod, st.iter, env, sub, out)
+                    self._untrack(st.target, env)
+                else:
+                    self._expr(mod, st.test, env, sub, out)
+                # two passes over the body: a key bound outside and drawn
+                # from inside (without rebinding) is reuse across iterations
+                self._stmts(mod, st.body, env, sub, out)
+                tmp: List[Finding] = []
+                self._stmts(mod, st.body, env, sub, tmp)
+                known = {(f.line, f.col, f.rule) for f in out}
+                out.extend(f for f in tmp
+                           if (f.line, f.col, f.rule) not in known)
+                self._stmts(mod, st.orelse, env, sub, out)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    self._expr(mod, item.context_expr, env, sub, out)
+                self._stmts(mod, st.body, env, sub, out)
+            elif isinstance(st, ast.Try):
+                self._stmts(mod, st.body, env, sub, out)
+                for h in st.handlers:
+                    self._stmts(mod, h.body, env, sub, out)
+                self._stmts(mod, st.orelse, env, sub, out)
+                self._stmts(mod, st.finalbody, env, sub, out)
+            elif isinstance(st, ast.Return) and st.value is not None:
+                self._expr(mod, st.value, env, sub, out)
+            elif isinstance(st, ast.Expr):
+                self._expr(mod, st.value, env, sub, out)
+
+    def _bind(self, mod, target, value, env, sub):
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target.id]
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            names = [e.id for e in target.elts if isinstance(e, ast.Name)]
+        fresh = False
+        if isinstance(value, ast.Call):
+            rn = self._rand_name(value, mod.imports)
+            fresh = rn in self.PRODUCERS
+        elif isinstance(value, ast.Subscript) and isinstance(value.value, ast.Name):
+            fresh = value.value.id in env  # slice of a tracked key array
+        elif isinstance(value, ast.Name):
+            fresh = value.id in env
+        for n in names:
+            if fresh:
+                env[n] = 0
+                for k in [k for k in sub if k[0] == n]:
+                    del sub[k]
+            else:
+                env.pop(n, None)
+
+    def _untrack(self, target, env):
+        if isinstance(target, ast.Name):
+            env.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._untrack(e, env)
+
+    def _expr(self, mod, expr, env, sub, out):
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Lambda):
+                self._check_fn(mod, node, out)
+            if not isinstance(node, ast.Call):
+                continue
+            rn = self._rand_name(node, mod.imports)
+            if rn is None or rn in self.NON_DRAWS or not node.args:
+                continue
+            key = node.args[0]
+            if isinstance(key, ast.Name):
+                if key.id in env:
+                    env[key.id] += 1
+                    if env[key.id] > 1:
+                        out.append(self.finding(
+                            mod, node,
+                            f"key `{key.id}` feeds more than one "
+                            f"jax.random draw — split/fold_in between draws",
+                        ))
+            elif (isinstance(key, ast.Subscript)
+                  and isinstance(key.value, ast.Name)
+                  and key.value.id in env):
+                idx = key.slice
+                tag = (key.value.id,
+                       idx.value if isinstance(idx, ast.Constant) else id(idx))
+                sub[tag] = sub.get(tag, 0) + 1
+                if sub[tag] > 1:
+                    out.append(self.finding(
+                        mod, node,
+                        f"key slot `{key.value.id}[{tag[1]}]` feeds more "
+                        "than one jax.random draw",
+                    ))
+            elif isinstance(key, ast.Attribute):
+                out.append(self.finding(
+                    mod, node,
+                    f"draw consumes stored raw key "
+                    f"`{_dotted(key, mod.imports) or '…'}` — split/fold_in "
+                    "first so the stream advances",
+                ))
+
+
+class REP005(Rule):
+    """Reductions over sub-f32 operands must accumulate/cast in f32.
+
+    The PR-3 bf16-master bug class: summing a bf16 plane re-associates
+    in bf16 and the sequential-round drift is unbounded.  Any
+    ``jnp`` reduction whose operand is freshly ``.astype``-downcast (or
+    cast to a variable dtype that may be sub-f32) must either pass
+    ``dtype=jnp.float32`` / ``preferred_element_type=jnp.float32`` or
+    immediately ``.astype(jnp.float32)`` the result.
+    """
+
+    id = "REP005"
+    scope_doc = "src/repro"
+
+    REDUCTIONS = {"sum", "mean", "prod", "dot", "vdot", "tensordot",
+                  "matmul", "einsum", "inner", "norm"}
+    SUB_F32 = {"bfloat16", "float16", "bf16", "fp16", "float8_e4m3fn",
+               "float8_e5m2"}
+    F32 = {"float32", "float64", "f32"}
+
+    def _dtype_class(self, node, imports) -> str:
+        """'safe' | 'suspect' for a dtype expression."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return "suspect" if node.value in self.SUB_F32 else (
+                "safe" if node.value in self.F32 else "suspect")
+        d = _dotted(node, imports)
+        if d:
+            leaf = d.split(".")[-1]
+            if leaf in self.F32:
+                return "safe"
+            if leaf == "dtype":
+                # `w.astype(x.dtype)` aligns one operand to another — the
+                # reduction dtype is decided by x, not introduced here
+                return "safe"
+            return "suspect"  # bf16 literal or a variable dtype
+        return "suspect"
+
+    def _astype_suspect(self, call: ast.Call, imports) -> bool:
+        f = call.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "astype"):
+            return False
+        dt = call.args[0] if call.args else next(
+            (k.value for k in call.keywords if k.arg == "dtype"), None)
+        return dt is not None and self._dtype_class(dt, imports) == "suspect"
+
+    def _is_reduction(self, call: ast.Call, imports) -> bool:
+        f = call.func
+        d = _dotted(f, imports)
+        if d and d.split(".")[-1] in self.REDUCTIONS and (
+            "numpy" in d or "linalg" in d or d.startswith("jax.")
+        ):
+            return True
+        return isinstance(f, ast.Attribute) and f.attr in {"sum", "mean"}
+
+    def _mitigated(self, call: ast.Call, mod: ParsedModule) -> bool:
+        for kw in call.keywords:
+            if kw.arg in ("dtype", "preferred_element_type", "acc_dtype"):
+                if self._dtype_class(kw.value, mod.imports) == "safe":
+                    return True
+        parent = mod.parents.get(call)
+        if (isinstance(parent, ast.Attribute) and parent.attr == "astype"
+                and parent.value is call):
+            gp = mod.parents.get(parent)
+            if isinstance(gp, ast.Call) and gp.func is parent:
+                dt = gp.args[0] if gp.args else next(
+                    (k.value for k in gp.keywords if k.arg == "dtype"), None)
+                if dt is not None and self._dtype_class(dt, mod.imports) == "safe":
+                    return True
+        return False
+
+    def check(self, mod, ctx):
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._is_reduction(node, mod.imports)):
+                continue
+            operands = list(node.args) + [k.value for k in node.keywords
+                                          if k.arg not in ("dtype", "axis")]
+            suspect = any(
+                isinstance(sb, ast.Call) and self._astype_suspect(sb, mod.imports)
+                for op in operands for sb in ast.walk(op)
+            )
+            if suspect and not self._mitigated(node, mod):
+                yield self.finding(
+                    mod, node,
+                    "reduction over a sub-f32 (or unknown-dtype) cast — "
+                    "accumulate in f32 (dtype=/preferred_element_type="
+                    "jnp.float32) or .astype(jnp.float32) the result",
+                )
+
+
+RULES: Sequence[Rule] = (REP001(), REP002(), REP003(), REP004(), REP005())
+
+
+# ---------------------------------------------------------- REP003 graph
+@dataclass
+class _FuncInfo:
+    key: Tuple[str, str]  # (path, qualname)
+    node: ast.AST
+    module: ParsedModule
+    parent: Optional[Tuple[str, str]]
+    cls: Optional[str]
+
+
+class RepoContext:
+    """Cross-module call graph: jit/scan roots → reachable functions."""
+
+    TRACERS = {
+        "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+        "jax.checkpoint", "jax.remat", "jax.custom_jvp", "jax.custom_vjp",
+        "jax.lax.scan", "jax.lax.map", "jax.lax.cond", "jax.lax.switch",
+        "jax.lax.while_loop", "jax.lax.fori_loop", "jax.lax.associative_scan",
+        "jax.experimental.shard_map.shard_map", "repro.utils.compat.shard_map",
+    }
+
+    def __init__(self, modules: Sequence[ParsedModule]):
+        self.modules = list(modules)
+        self.by_dotted = {m.dotted: m for m in self.modules}
+        self.functions: Dict[Tuple[str, str], _FuncInfo] = {}
+        self.children: Dict[Tuple[str, str], Dict[str, Tuple[str, str]]] = {}
+        self.modlevel: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        self.methods: Dict[Tuple[str, str, str], Tuple[str, str]] = {}
+        for m in self.modules:
+            self._index(m)
+        self.reachable = self._reach(self._roots())
+
+    # -- indexing ----------------------------------------------------------
+    def _index(self, mod: ParsedModule):
+        self.modlevel.setdefault(mod.path, {})
+
+        def visit(node, qual, parent_key, cls):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    key = (mod.path, q)
+                    self.functions[key] = _FuncInfo(key, child, mod, parent_key, cls)
+                    if parent_key is not None:
+                        self.children.setdefault(parent_key, {})[child.name] = key
+                    elif cls is None:
+                        self.modlevel[mod.path][child.name] = key
+                    if cls is not None and parent_key is None:
+                        self.methods[(mod.path, cls, child.name)] = key
+                    visit(child, q, key, cls)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{qual}.{child.name}" if qual else child.name,
+                          None, child.name)
+                else:
+                    visit(child, qual, parent_key, cls)
+
+        visit(mod.tree, "", None, None)
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, expr: ast.AST, mod: ParsedModule,
+                fkey: Optional[Tuple[str, str]]) -> Optional[Tuple[str, str]]:
+        if isinstance(expr, ast.Name):
+            k = fkey
+            while k is not None:
+                hit = self.children.get(k, {}).get(expr.id)
+                if hit:
+                    return hit
+                k = self.functions[k].parent
+            hit = self.modlevel.get(mod.path, {}).get(expr.id)
+            if hit:
+                return hit
+            return self._cross(mod.imports.get(expr.id))
+        if isinstance(expr, ast.Attribute):
+            if (isinstance(expr.value, ast.Name) and expr.value.id == "self"
+                    and fkey is not None):
+                cls = self.functions[fkey].cls
+                if cls:
+                    return self.methods.get((mod.path, cls, expr.attr))
+            return self._cross(_dotted(expr, mod.imports))
+        return None
+
+    def _cross(self, dotted: Optional[str]) -> Optional[Tuple[str, str]]:
+        if not dotted or not dotted.startswith("repro."):
+            return None
+        mod_path, _, fname = dotted.rpartition(".")
+        m = self.by_dotted.get(mod_path)
+        if m:
+            return self.modlevel.get(m.path, {}).get(fname)
+        return None
+
+    # -- roots + reachability ---------------------------------------------
+    def _enclosing(self, mod: ParsedModule,
+                   node: ast.AST) -> Optional[Tuple[str, str]]:
+        n = node
+        chain = []
+        while n is not None:
+            n = mod.parents.get(n)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                chain.append(n)
+        for info in self.functions.values():
+            if info.module is mod and chain and info.node is chain[0]:
+                return info.key
+        return None
+
+    def _roots(self):
+        roots = set()
+        for mod in self.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        d = _dotted(dec, mod.imports)
+                        if d is None and isinstance(dec, ast.Call):
+                            d = _dotted(dec.func, mod.imports)
+                            if d == "functools.partial" and dec.args:
+                                d = _dotted(dec.args[0], mod.imports)
+                        if d in self.TRACERS:
+                            for info in self.functions.values():
+                                if info.node is node:
+                                    roots.add(info.key)
+                elif isinstance(node, ast.Call):
+                    d = _dotted(node.func, mod.imports)
+                    if d not in self.TRACERS:
+                        continue
+                    fkey = self._enclosing(mod, node)
+                    cands = list(node.args) + [k.value for k in node.keywords]
+                    for arg in cands:
+                        hit = self.resolve(arg, mod, fkey)
+                        if hit:
+                            roots.add(hit)
+        return roots
+
+    def _reach(self, roots):
+        seen = set()
+        work = list(roots)
+        while work:
+            key = work.pop()
+            if key in seen or key not in self.functions:
+                continue
+            seen.add(key)
+            info = self.functions[key]
+            # nested defs trace with their parent
+            work.extend(self.children.get(key, {}).values())
+            for node in _region(info.node):
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    hit = self.resolve(node, info.module, key)
+                    if hit and hit not in seen:
+                        work.append(hit)
+        return seen
+
+
+# ------------------------------------------------------------------ driver
+def iter_repo_files(src_root: Path = REPO_SRC) -> Iterator[Path]:
+    yield from sorted((src_root / "repro").rglob("*.py"))
+
+
+def lint_modules(modules: Sequence[ParsedModule],
+                 rules: Optional[Sequence[Rule]] = None,
+                 include_suppressed: bool = False) -> List[Finding]:
+    ctx = RepoContext(modules)
+    findings: List[Finding] = []
+    for rule in (rules or RULES):
+        for mod in modules:
+            if not rule.applies(mod.path):
+                continue
+            for f in rule.check(mod, ctx):
+                if include_suppressed or not mod.suppressed(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_sources(named_sources: Dict[str, str],
+                 rules: Optional[Sequence[Rule]] = None,
+                 include_suppressed: bool = False) -> List[Finding]:
+    """Lint in-memory sources (fixture tests): {virtual path: source}."""
+    mods = [ParsedModule(p, s) for p, s in sorted(named_sources.items())]
+    return lint_modules(mods, rules, include_suppressed)
+
+
+def lint_repo(src_root: Path = REPO_SRC,
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    mods = []
+    for p in iter_repo_files(src_root):
+        rel = p.relative_to(src_root.parent).as_posix()
+        mods.append(ParsedModule(rel, p.read_text()))
+    return lint_modules(mods, rules)
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path: Path = BASELINE_PATH) -> set:
+    if not path.exists():
+        return set()
+    out = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def write_baseline(findings: Iterable[Finding], path: Path = BASELINE_PATH):
+    lines = [
+        "# repro.analysis.lint baseline — grandfathered findings.",
+        "# One `path::RULE::stripped source line` per entry; regenerate with",
+        "#   python -m repro.analysis.lint --baseline",
+        "# Keep this empty (or justified line-by-line): new findings fail CI.",
+    ]
+    lines += sorted({f.baseline_key for f in findings})
+    path.write_text("\n".join(lines) + "\n")
+
+
+# ------------------------------------------------------------------ README
+README_BEGIN = "<!-- analysis-rules:begin (generated by repro.analysis.lint) -->"
+README_END = "<!-- analysis-rules:end -->"
+
+
+def rule_table_md() -> str:
+    """Rule table rendered from the rule docstrings (first line =
+    invariant, first body paragraph = rationale)."""
+    rows = ["| ID | Invariant | Scope | Rationale |",
+            "| --- | --- | --- | --- |"]
+    for rule in RULES:
+        doc = (type(rule).__doc__ or "").strip().splitlines()
+        invariant = doc[0].strip().rstrip(".") if doc else ""
+        body = [ln.strip() for ln in doc[1:]]
+        para: List[str] = []
+        for ln in body:
+            if not ln and para:
+                break
+            if ln:
+                para.append(ln)
+        first = " ".join(para)
+        rationale = first.split(". ")[0].rstrip(".") + "." if first else ""
+        rows.append(f"| {rule.id} | {invariant}. | `{rule.scope_doc}` "
+                    f"| {rationale} |")
+    return "\n".join(rows)
+
+
+def sync_readme(write: bool = False, path: Path = README_PATH) -> bool:
+    """True iff the README's generated block byte-matches the rule table."""
+    text = path.read_text() if path.exists() else ""
+    block = f"{README_BEGIN}\n{rule_table_md()}\n{README_END}"
+    if README_BEGIN in text and README_END in text:
+        head, _, rest = text.partition(README_BEGIN)
+        _, _, tail = rest.partition(README_END)
+        new = head + block + tail
+    else:
+        new = text.rstrip() + "\n\n" + block + "\n"
+    if write and new != text:
+        path.write_text(new)
+        return True
+    return new == text
+
+
+# ------------------------------------------------------------------ CLI
+def _main(argv=None) -> int:
+    # `python -m` runs this file as __main__ — delegate to the canonical
+    # import so paths/rule identities come from one module instance
+    from repro.analysis import lint as canonical
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-invariant AST lint (REP001–REP005).")
+    ap.add_argument("--baseline", action="store_true",
+                    help="rewrite the grandfathered-findings baseline from "
+                         "the current findings")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the README rule table in place")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also dump findings as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+
+    if args.write:
+        changed = canonical.sync_readme(write=True)
+        print(f"README rule table {'updated' if changed else 'already current'}")
+        return 0
+
+    findings = canonical.lint_repo()
+    baseline = canonical.load_baseline()
+    if args.baseline:
+        canonical.write_baseline(findings)
+        print(f"baseline written: {len(findings)} grandfathered finding(s)")
+        return 0
+
+    new = [f for f in findings if f.baseline_key not in baseline]
+    grandfathered = len(findings) - len(new)
+    for f in new:
+        print(f)
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            [vars(f) | {"baselined": f.baseline_key in baseline}
+             for f in findings], indent=2, default=str) + "\n")
+    print(f"repro.analysis.lint: {len(new)} new finding(s), "
+          f"{grandfathered} baselined, {len(canonical.RULES)} rules")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(_main())

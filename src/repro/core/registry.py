@@ -139,11 +139,11 @@ def _fold_coef(c: FoldCoef, cfg, eta_l, n_active):
 
 
 def _is_static_zero(c) -> bool:
-    return isinstance(c, (int, float)) and float(c) == 0.0
+    return isinstance(c, (int, float)) and float(c) == 0.0  # repro: noqa REP003 -- isinstance-guarded Python scalar, static at trace time
 
 
 def _is_static_one(c) -> bool:
-    return isinstance(c, (int, float)) and float(c) == 1.0
+    return isinstance(c, (int, float)) and float(c) == 1.0  # repro: noqa REP003 -- isinstance-guarded Python scalar, static at trace time
 
 
 class AlgorithmSpec(NamedTuple):

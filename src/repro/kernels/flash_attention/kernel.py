@@ -122,7 +122,7 @@ def flash_attention_bhsd(
     B, H, Sq, hd = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     G = H // Hkv
-    scale = float(scale if scale is not None else hd**-0.5)
+    scale = float(scale if scale is not None else hd**-0.5)  # repro: noqa REP003 -- scale is a static Python float by kernel contract
 
     bq = min(bq, max(8, 1 << (Sq - 1).bit_length()))
     bkv = min(bkv, max(8, 1 << (Skv - 1).bit_length()))

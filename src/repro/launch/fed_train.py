@@ -408,6 +408,18 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
     )
 
 
+def _static_contracts(cfg: FedConfig, args: argparse.Namespace) -> dict:
+    """One-path Layer-2 contract summary for the dryrun artifact
+    (memoized inside repro.analysis.trace, so repeated in-process dryruns
+    compile the tiny probe program once per path)."""
+    from repro.analysis.trace import quick_contracts
+
+    use_async = (args.async_pipeline or cfg.pipeline_depth > 1
+                 or cfg.staleness > 0)
+    return quick_contracts(use_async=use_async,
+                           use_fused_kernel=cfg.use_fused_kernel)
+
+
 def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
     """Persist the RESOLVED config (not the argv) so flag-wiring is
     asserted against what the engine will actually see."""
@@ -453,6 +465,10 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
              "devices_visible": len(jax.devices())}
             if cfg.cohort_shard > 0 else None
         ),
+        # Layer-2 contract state per rev (repro.analysis.trace): the
+        # resolved execution path's tiny program is lowered and checked —
+        # donation aliased, transfer-guard clean, exactly-once tracing
+        "static_contracts": _static_contracts(cfg, args),
     }
     DRYRUN_ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
     DRYRUN_ARTIFACT.write_text(json.dumps(payload, indent=1))

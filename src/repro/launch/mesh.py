@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.compat import device_mesh, make_mesh
+
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # bytes/s
@@ -19,7 +21,7 @@ MULTI_POD_SHAPE = (2, 16, 16)  # 2 pods × 256 chips
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
@@ -27,7 +29,7 @@ def make_test_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(1, n // data))
-    return jax.make_mesh((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_cohort_mesh(n_shards: int = 0):
@@ -38,9 +40,6 @@ def make_cohort_mesh(n_shards: int = 0):
     spans hosts; CI emulates with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
-    import numpy as np
-    from jax.sharding import Mesh
-
     devs = jax.devices()
     n = len(devs) if n_shards in (0, None) else n_shards
     if n > len(devs):
@@ -48,7 +47,7 @@ def make_cohort_mesh(n_shards: int = 0):
             f"cohort mesh wants {n} devices but only {len(devs)} are visible "
             f"(emulate with XLA_FLAGS=--xla_force_host_platform_device_count={n})"
         )
-    return Mesh(np.asarray(devs[:n]), ("clients",))
+    return device_mesh(devs[:n], ("clients",))
 
 
 def n_chips(mesh) -> int:

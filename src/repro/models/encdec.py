@@ -133,7 +133,7 @@ def decode_train(params, tgt_tokens, enc_out, *, cfg: ModelConfig, parallel=None
     h, _ = jax.lax.scan(fn, h, params["dec"],
                         unroll=min(scan_unroll, cfg.n_layers) if scan_unroll > 1 else 1)
     h = rmsnorm(h, params["dec_norm"])
-    return jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(adtype))
+    return jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(adtype))  # repro: noqa REP005 -- activation-dtype logits projection is a model precision choice
 
 
 def init_decode_cache(params, cfg: ModelConfig, batch: int, max_len: int, enc_out):
@@ -174,6 +174,6 @@ def decode_step(params, token, cache, pos, *, cfg: ModelConfig, parallel=None, k
         unroll=min(scan_unroll, cfg.n_layers) if scan_unroll > 1 else 1,
     )
     h = rmsnorm(h, params["dec_norm"])
-    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(adtype))
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(adtype))  # repro: noqa REP005 -- activation-dtype logits projection is a model precision choice
     new_cache = dict(cache, k=nk, v=nv)
     return logits, new_cache

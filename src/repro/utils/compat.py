@@ -13,10 +13,19 @@ right symbol for the installed jax at call time:
   newer jax has top-level ``jax.shard_map`` with the ``check_vma`` kwarg;
   0.4.x has ``jax.experimental.shard_map.shard_map`` where the same knob
   is spelled ``check_rep``.
+* ``make_mesh(axis_shapes, axis_names)`` — ``jax.make_mesh`` (new in
+  0.4.35, device-order-aware) when present, else the
+  ``mesh_utils.create_device_mesh`` + ``Mesh`` spelling.
+* ``device_mesh(devices, axis_names)`` — the explicit-device-list
+  ``Mesh`` constructor.  The class moved homes across releases
+  (``jax.sharding.Mesh`` today, ``jax.interpreters.pxla`` before);
+  constructing through here keeps call sites home-agnostic.
 
 Resolution happens per call (cheap ``hasattr``), not at import, so tests
 can exercise both paths by monkeypatching the ``jax`` module.  New code
-should import from here rather than hand-rolling version checks.
+should import from here rather than hand-rolling version checks — the
+REP002 lint rule (``repro.analysis.lint``) enforces exactly that: any
+direct call to the symbols above outside this module is a finding.
 """
 from __future__ import annotations
 
@@ -37,6 +46,35 @@ def set_mesh(mesh):
         return jax.set_mesh(mesh)
     # jax 0.4.x: Mesh implements the context-manager protocol itself.
     return mesh
+
+
+def make_mesh(axis_shapes, axis_names):
+    """Version-portable ``jax.make_mesh``.
+
+    Prefers ``jax.make_mesh`` (picks a device order that favors the
+    backend's collective topology); older jax falls back to
+    ``mesh_utils.create_device_mesh`` with the default device list.
+    """
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names)
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_utils.create_device_mesh(axis_shapes), axis_names)
+
+
+def device_mesh(devices, axis_names):
+    """Build a ``Mesh`` over an explicit device array/list.
+
+    The thin-but-deliberate routing point for the raw ``Mesh``
+    constructor: all mesh construction in the repo goes through this
+    module, so a future constructor change (e.g. ``AbstractMesh``
+    plumbing) lands in one place.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices), axis_names)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):

@@ -199,3 +199,18 @@ def test_dryrun_artifact_default_mode(tmp_path, monkeypatch):
     assert json.loads(art.read_text())["engine_mode"] == "per_round"
     assert main(["--dryrun", "--async"]) == 0
     assert json.loads(art.read_text())["engine_mode"] == "async_pipeline"
+
+
+def test_dryrun_artifact_static_contracts(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    assert main(["--dryrun"]) == 0
+    sc = json.loads(art.read_text())["static_contracts"]
+    assert sc["donation_ok"] is True
+    assert sc["transfer_guard_ok"] is True
+    assert sc["trace_count"] == sc["trace_budget"] == 1
+    assert "sync" in sc["path"]
+    assert main(["--dryrun", "--async"]) == 0
+    sc = json.loads(art.read_text())["static_contracts"]
+    assert sc["donation_ok"] is True
+    assert "async" in sc["path"]

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.trace import assert_trace_budget
 from repro.configs.base import FedConfig
 from repro.core import FederatedEngine, list_algorithms
 from repro.data import FederatedData, make_synthetic_classification
@@ -92,14 +93,20 @@ def test_run_rounds_matches_sequential_trajectory(algo):
 
 
 def test_run_rounds_is_one_trace_and_caches():
+    """The per-path budget itself lives in repro.analysis.trace
+    (TRACE_BUDGET): N rounds are ONE trace of the scan, a same-shapes
+    call is cached, a new static n_rounds is one new path."""
     _, eng, data, model = _setup("fedcm")
-    assert eng.run_rounds_traces == 0
-    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
-    assert eng.run_rounds_traces == 1  # N rounds, ONE trace of the scan
-    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS)
-    assert eng.run_rounds_traces == 1  # same shapes: cached, no retrace
-    eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS + 1)
-    assert eng.run_rounds_traces == 2  # new static n_rounds: one new trace
+    assert_trace_budget(
+        eng, "run_rounds_traces",
+        calls=[
+            lambda: eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS),
+            lambda: eng.run_rounds(_fresh_state(eng, model), data, N_ROUNDS),
+            lambda: eng.run_rounds(_fresh_state(eng, model), data,
+                                   N_ROUNDS + 1),
+        ],
+        expected_paths=[1, 1, 2],
+    )
 
 
 def test_run_rounds_rejects_nonpositive():
@@ -303,14 +310,21 @@ def test_async_requires_flat_plane_and_validates_args():
 
 
 def test_async_is_one_trace_and_caches():
+    """Async budget pinned through the same repro.analysis.trace checker:
+    same statics are cached, a new static depth is one new path."""
     _, eng, data, model = _setup("fedcm")
-    assert eng.run_rounds_async_traces == 0
-    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=2)
-    assert eng.run_rounds_async_traces == 1
-    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=2)
-    assert eng.run_rounds_async_traces == 1  # same statics: cached
-    eng.run_rounds_async(_fresh_state(eng, model), data, 4, pipeline_depth=4)
-    assert eng.run_rounds_async_traces == 2  # new static depth: one retrace
+    assert_trace_budget(
+        eng, "run_rounds_async_traces",
+        calls=[
+            lambda: eng.run_rounds_async(_fresh_state(eng, model), data, 4,
+                                         pipeline_depth=2),
+            lambda: eng.run_rounds_async(_fresh_state(eng, model), data, 4,
+                                         pipeline_depth=2),
+            lambda: eng.run_rounds_async(_fresh_state(eng, model), data, 4,
+                                         pipeline_depth=4),
+        ],
+        expected_paths=[1, 1, 2],
+    )
 
 
 def test_async_inscan_eval_cadence():
