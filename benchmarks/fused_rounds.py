@@ -89,6 +89,12 @@ PARTICIPATION_ARTIFACT = (
 FAULT_ARTIFACT = (
     Path(__file__).resolve().parent / "artifacts" / "fault_tolerance.json"
 )
+#: the fleet-smoke job's per-round telemetry JSONL (repro.fleet): when a
+#: `fed_train --serve` run at this rev wrote one here, its per-round
+#: rounds/s series + hot-swap summary fold into the trajectory
+FLEET_ARTIFACT = (
+    Path(__file__).resolve().parent / "artifacts" / "fleet_telemetry.jsonl"
+)
 #: top-level per-PR perf trajectory: rounds/s per workload, one entry per
 #: commit — the diffable history CI uploads (and the repo carries)
 BENCH_SUMMARY = Path(__file__).resolve().parents[1] / "BENCH_fused_rounds.json"
@@ -358,6 +364,33 @@ def write_trajectory_summary(result: dict) -> dict:
             entry["fault_tolerance"] = {
                 "stale_rev": ft.get("rev") if isinstance(ft, dict) else "pre-harness"
             }
+    if FLEET_ARTIFACT.exists():
+        from repro.fleet.telemetry import events, replay, round_rows
+
+        try:
+            header, rows, _ = replay(FLEET_ARTIFACT)
+        except ValueError:
+            header, rows = {"meta": {}}, []
+        if header.get("meta", {}).get("rev") == entry["rev"]:
+            # the --serve run's per-round record: throughput series with
+            # eval points, plus the serving thread's swap/health summary
+            rnds = round_rows(rows)
+            summaries = events(rows, "serve_summary")
+            probes = events(rows, "health_probe")
+            entry["fleet"] = {
+                "rounds": len(rnds),
+                "rounds_per_s": [r["rounds_per_s"] for r in rnds],
+                "eval_acc": [
+                    {"round": r["round"], "acc": r["eval_acc"]}
+                    for r in rnds if r.get("eval_acc") is not None
+                ],
+                "serve": ({k: summaries[-1].get(k) for k in
+                           ("steps", "swaps", "swaps_mid_session",
+                            "served_version")} if summaries else None),
+                "health_status": probes[-1].get("status") if probes else None,
+            }
+        else:
+            entry["fleet"] = {"stale_rev": header.get("meta", {}).get("rev")}
     data = {"trajectory": []}
     if BENCH_SUMMARY.exists():
         try:

@@ -298,6 +298,24 @@ class AsyncRoundMetrics(NamedTuple):
     quorum_skipped: jax.Array = None
 
 
+def metrics_to_host(ms: NamedTuple) -> Dict[str, np.ndarray]:
+    """Surface a (stacked) metrics tuple off-device in ONE transfer.
+
+    A fused chunk returns ``RoundMetrics`` of stacked ``(chunk,)`` arrays;
+    reading them field-by-field with ``float(...)`` costs one device sync
+    each.  This fetches every non-None field in a single ``device_get``
+    of the whole tuple — the ONLY host sync telemetry adds per chunk
+    (REP003 stays clean: this is host-side driver code, never reachable
+    from the jitted round program) — and returns ``{field: np.ndarray}``.
+    Scalar fields come back as shape-``(1,)`` so callers can treat
+    per-round and single-round metrics uniformly."""
+    named = [(f, v) for f, v in zip(ms._fields, ms) if v is not None]
+    fetched = jax.device_get(tuple(v for _, v in named))
+    return {
+        f: np.atleast_1d(np.asarray(v)) for (f, _), v in zip(named, fetched)
+    }
+
+
 def cohort_capacity(cfg: FedConfig) -> int:
     """Static cohort axis length. ``fixed``: exactly S. ``bernoulli``: a
     Binomial(N, p) tail bound — mean + ``cfg.bernoulli_capacity_sigma``·σ,

@@ -44,6 +44,8 @@ import json
 import os
 from pathlib import Path
 
+import time
+
 import numpy as np
 
 import jax
@@ -53,11 +55,14 @@ from repro.checkpoint import latest_step, load_fed_run, save_fed_run
 from repro.configs.base import FaultConfig, FedConfig
 from repro.core import (
     FederatedEngine,
+    RoundMetrics,
     describe_algorithm,
     get_algorithm,
     list_algorithms,
     make_eval_fn,
 )
+from repro.core.engine import metrics_to_host
+from repro.fleet.telemetry import FAULT_COUNTERS, ROUND_FIELDS, TELEMETRY_SCHEMA
 from repro.data import FederatedData, StreamingClientData, make_synthetic_classification
 from repro.data.population import AVAILABILITY_PROCESSES, POPULATION_STORES
 from repro.models.small import classification_loss, mlp_classifier
@@ -88,6 +93,11 @@ def run_federated(
     ckpt_dir: str = "",
     resume: bool = False,
     die_after: int = 0,
+    serve: bool = False,
+    health_port: int = 0,
+    round_deadline_s: float = 120.0,
+    telemetry_path: str = "",
+    publish_retain: int = 4,
 ):
     """Returns (final_test_acc, history MetricLogger).
 
@@ -97,7 +107,16 @@ def run_federated(
     ``ckpt_dir`` and CONTINUES the trajectory bitwise (same fused-scan
     chunking relative to absolute round).  ``die_after`` R kills the
     process with exit code 75 right after the first snapshot at round
-    ≥ R — the chaos half of the kill-and-resume CI smoke."""
+    ≥ R — the chaos half of the kill-and-resume CI smoke.
+
+    ``serve`` turns the run into the round-to-serving fleet loop
+    (``repro.fleet``): rounds keep the main thread, a serving thread
+    continuously decodes against the latest published params (published
+    at every ``ckpt_every`` boundary, hot-swapped atomically between
+    decode steps), a health endpoint reports round liveness, and an
+    append-only telemetry JSONL records one row per round.  Fleet is
+    observation-only — the training trajectory is bit-identical with or
+    without it."""
     if cfg.population_store == "host":
         # out-of-core path: no (N, n_per, …) device stack exists — shards
         # regenerate on demand per sampled cohort (label skew replaces the
@@ -117,7 +136,8 @@ def run_federated(
     evaluate = make_eval_fn(model.apply)
 
     log = MetricLogger(
-        ["round", "algo", "loss", "test_acc", "n_active", "mb_down", "mb_up"],
+        ["round", "algo", "loss", "test_acc", "n_active", "mb_down", "mb_up",
+         "dropped", "quar", "retries", "qskip"],
         echo=echo, echo_every=1,
     )
     x_te_j, y_te_j = jnp.asarray(x_te), jnp.asarray(y_te)
@@ -177,6 +197,33 @@ def run_federated(
                     population._rows
                 )
             r = int(meta["step"])
+        fleet = None
+        if serve:
+            # the fleet loop: serving + health + telemetry threads around
+            # the SAME chunk loop (observation-only — fleet never touches
+            # FedState or the traced programs)
+            from repro.fleet.driver import FleetDriver
+
+            fleet = FleetDriver(
+                ckpt_dir=ckpt_dir,
+                telemetry_path=telemetry_path or None,
+                retain=publish_retain,
+                deadline_s=round_deadline_s,
+                health_port=health_port,
+                meta={"algo": cfg.algo, "rounds": cfg.rounds,
+                      "num_clients": cfg.num_clients,
+                      "cohort_size": cfg.cohort_size,
+                      "ckpt_every": ckpt_every, "resumed_at": r},
+            )
+            # version 1 = the params entering the run, so the serving
+            # thread never decodes against unpublished (random) weights
+            fleet.publish(r, state.params)
+            fleet.start_serving(
+                model.apply, template=state.params,
+                batch_x=x_te_j[: min(128, x_te_j.shape[0])],
+            )
+            print(f"fleet: serving + health at {fleet.health.url} "
+                  f"(telemetry: {fleet.telemetry.path})")
         while r < cfg.rounds:
             chunk = min(eval_every, cfg.rounds - r)
             if ckpt_every > 0:
@@ -185,32 +232,58 @@ def run_federated(
                 # bitwise continuation needs identical scan programs
                 nxt = ckpt_every * (r // ckpt_every + 1)
                 chunk = min(chunk, nxt - r)
+            t0 = time.perf_counter()
             state, ms = eng.run_rounds(state, data, chunk)
+            # ONE host transfer per chunk for ALL metric consumers (log +
+            # telemetry + fault counters) — REP003: never per round
+            host = metrics_to_host(ms)
+            dt = time.perf_counter() - t0
             r += chunk
             acc = evaluate(state.params, x_te_j, y_te_j)
-            log.log(round=r, algo=cfg.algo, loss=round(float(ms.loss[-1]), 4),
-                    test_acc=round(acc, 4), n_active=int(ms.n_active[-1]),
-                    mb_down=round(float(ms.bytes_down[-1]) / 2**20, 2),
-                    mb_up=round(float(ms.bytes_up[-1]) / 2**20, 2))
-            if ckpt_every > 0 and (r % ckpt_every == 0 or r >= cfg.rounds):
+            pub_version = None
+            snapshot = ckpt_every > 0 and (r % ckpt_every == 0 or r >= cfg.rounds)
+            if snapshot:
                 pop = eng.population
                 save_fed_run(
                     ckpt_dir, r, state,
                     population=getattr(pop, "inner", pop) if pop is not None else None,
                 )
-                if die_after > 0 and r >= die_after:
-                    # simulate preemption: no cleanup, no atexit — the
-                    # snapshot just published is all a resume may rely on
-                    os._exit(75)
+                if fleet is not None:
+                    pub_version = fleet.publish(r, state.params)
+            if fleet is not None:
+                fleet.record_chunk(start_round=r - chunk, host=host,
+                                   seconds=dt, eval_acc=acc,
+                                   published_version=pub_version)
+            log.log(round=r, algo=cfg.algo, loss=round(float(host["loss"][-1]), 4),
+                    test_acc=round(acc, 4), n_active=int(host["n_active"][-1]),
+                    mb_down=round(float(host["bytes_down"][-1]) / 2**20, 2),
+                    mb_up=round(float(host["bytes_up"][-1]) / 2**20, 2),
+                    dropped=int(host["n_dropped"].sum()) if "n_dropped" in host else None,
+                    quar=int(host["n_quarantined"].sum()) if "n_quarantined" in host else None,
+                    retries=int(host["n_retries"].sum()) if "n_retries" in host else None,
+                    qskip=int(host["quorum_skipped"].sum()) if "quorum_skipped" in host else None)
+            if snapshot and die_after > 0 and r >= die_after:
+                # simulate preemption: no cleanup, no atexit — the
+                # snapshot just published is all a resume may rely on
+                # (the fleet telemetry rows above are already fsynced)
+                os._exit(75)
+        if fleet is not None:
+            summary = fleet.stop()
+            print(f"fleet: {summary.get('swaps', 0)} hot-swaps "
+                  f"({summary.get('swaps_mid_session', 0)} under decode load) "
+                  f"over {summary.get('steps', 0)} decode steps; "
+                  f"health={summary.get('health_status')}")
         return acc, log
     for r in range(cfg.rounds):
         state, m = eng.run_round(state, data)
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
+            host = metrics_to_host(m)  # one transfer for the whole row
             acc = evaluate(state.params, x_te_j, y_te_j)
-            log.log(round=r + 1, algo=cfg.algo, loss=round(float(m.loss), 4),
-                    test_acc=round(acc, 4), n_active=int(m.n_active),
-                    mb_down=round(float(m.bytes_down) / 2**20, 2),
-                    mb_up=round(float(m.bytes_up) / 2**20, 2))
+            log.log(round=r + 1, algo=cfg.algo,
+                    loss=round(float(host["loss"][-1]), 4),
+                    test_acc=round(acc, 4), n_active=int(host["n_active"][-1]),
+                    mb_down=round(float(host["bytes_down"][-1]) / 2**20, 2),
+                    mb_up=round(float(host["bytes_up"][-1]) / 2**20, 2))
     return acc, log
 
 
@@ -361,6 +434,31 @@ def build_parser() -> argparse.ArgumentParser:
                     help="chaos: exit(75) right after the first snapshot at "
                          "round >= N (pair with --resume in a second "
                          "invocation)")
+    # ---- round-to-serving fleet loop (repro.fleet) ---------------------
+    fleet = ap.add_argument_group(
+        "fleet serving",
+        "--serve runs the round-to-serving loop: a serving thread "
+        "continuously decodes against the latest published params "
+        "(published at every --ckpt-every boundary, hot-swapped atomically "
+        "between decode steps), /healthz-/metrics-/telemetry-tail health "
+        "endpoint, append-only per-round telemetry JSONL")
+    fleet.add_argument("--serve", action="store_true",
+                       help="run serving + health + telemetry alongside "
+                            "the fused round loop (needs --ckpt-every and "
+                            "--ckpt-dir: publication rides the snapshot "
+                            "cadence)")
+    fleet.add_argument("--health-port", type=int, default=0,
+                       help="health endpoint port (0 = ephemeral; the "
+                            "bound port is printed at startup)")
+    fleet.add_argument("--round-deadline", type=float, default=120.0,
+                       help="/healthz liveness deadline: 503 when the last "
+                            "completed round is older than this many seconds")
+    fleet.add_argument("--telemetry", default="",
+                       help="telemetry JSONL path (default "
+                            "<ckpt-dir>/telemetry.jsonl)")
+    fleet.add_argument("--publish-retain", type=int, default=4,
+                       help="published model versions kept on disk (the "
+                            "atomic publication ring; >= 2)")
     ap.add_argument("--dryrun", action="store_true",
                     help="resolve + persist the config artifact and exit "
                          "without training")
@@ -447,6 +545,11 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
         assert cfg.fault.seed == args.fault_seed
     else:
         assert cfg.fault is None
+    # telemetry/--dryrun agreement: every fault counter a telemetry row
+    # carries must BE a RoundMetrics field (one rename breaks this loudly)
+    assert set(FAULT_COUNTERS) <= set(RoundMetrics._fields), (
+        set(FAULT_COUNTERS) - set(RoundMetrics._fields)
+    )
     payload = {
         "resolved_config": dataclasses.asdict(cfg),
         "engine_mode": (
@@ -457,6 +560,26 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
         "eval_every": args.eval_every,
         "dirichlet": args.dirichlet,
         "ckpt_every": args.ckpt_every,
+        # fleet loop wiring: the serving/telemetry knobs the run would use
+        "serve": {
+            "enabled": args.serve,
+            "health_port": args.health_port,
+            "round_deadline_s": args.round_deadline,
+            "telemetry_path": (args.telemetry
+                               or (os.path.join(args.ckpt_dir, "telemetry.jsonl")
+                                   if args.ckpt_dir else None)),
+            "publish_retain": args.publish_retain,
+            "publish_every": args.ckpt_every if args.serve else None,
+        },
+        # the telemetry row schema this build emits — asserted against
+        # repro.fleet.telemetry so --dryrun and the rows a --serve run
+        # writes can never disagree (RoundMetrics is the source of truth
+        # for the counter names)
+        "telemetry": {
+            "schema": TELEMETRY_SCHEMA,
+            "round_fields": list(ROUND_FIELDS),
+            "fault_counters": list(FAULT_COUNTERS),
+        },
         # the mesh the engine would build for cfg.cohort_shard — recorded
         # so CI (which runs dryrun single-device AND multi-device) asserts
         # the flag actually reaches the mesh constructor
@@ -511,6 +634,17 @@ def main(argv=None) -> int:
         ap.error("--die-after kills AFTER a snapshot — add --ckpt-every")
     if args.resume and args.ckpt_every <= 0:
         ap.error("--resume continues a snapshotted run — add --ckpt-every")
+    if args.serve and args.ckpt_every <= 0:
+        # (transitively this also excludes --per-round and the async
+        # engine: both conflict with --ckpt-every above)
+        ap.error("--serve publishes at snapshot boundaries — add "
+                 "--ckpt-every N --ckpt-dir DIR")
+    if args.serve and not args.ckpt_dir:
+        ap.error("--serve needs --ckpt-dir (publisher + telemetry live "
+                 "under it)")
+    if args.publish_retain < 2:
+        ap.error("--publish-retain must be >= 2: the publication ring must "
+                 "outlive a reader's just-resolved version")
     cfg = resolve_config(args)
     if args.dryrun:
         path = write_dryrun_artifact(cfg, args)
@@ -520,7 +654,11 @@ def main(argv=None) -> int:
                            seed=args.seed, fused=not args.per_round,
                            async_pipeline=use_async,
                            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-                           resume=args.resume, die_after=args.die_after)
+                           resume=args.resume, die_after=args.die_after,
+                           serve=args.serve, health_port=args.health_port,
+                           round_deadline_s=args.round_deadline,
+                           telemetry_path=args.telemetry,
+                           publish_retain=args.publish_retain)
     print(f"\n{args.algo}: final test accuracy = {acc:.4f}")
     return 0
 

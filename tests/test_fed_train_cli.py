@@ -201,6 +201,56 @@ def test_dryrun_artifact_default_mode(tmp_path, monkeypatch):
     assert json.loads(art.read_text())["engine_mode"] == "async_pipeline"
 
 
+def test_serve_flags_reach_dryrun_artifact(tmp_path, monkeypatch):
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    rc = main(["--dryrun", "--serve", "--ckpt-every", "2",
+               "--ckpt-dir", str(tmp_path), "--round-deadline", "45",
+               "--publish-retain", "3"])
+    assert rc == 0
+    sv = json.loads(art.read_text())["serve"]
+    assert sv["enabled"] is True
+    assert sv["round_deadline_s"] == pytest.approx(45.0)
+    assert sv["publish_retain"] == 3
+    assert sv["publish_every"] == 2
+    # telemetry path defaults into the ckpt dir
+    assert sv["telemetry_path"] == str(tmp_path / "telemetry.jsonl")
+    # without --serve the knobs are recorded but disabled
+    assert main(["--dryrun"]) == 0
+    sv = json.loads(art.read_text())["serve"]
+    assert sv["enabled"] is False and sv["publish_every"] is None
+
+
+def test_dryrun_telemetry_schema_agrees_with_fleet(tmp_path, monkeypatch):
+    """The artifact's telemetry block IS the fleet schema — a rename in
+    either place makes --dryrun and the written rows disagree loudly."""
+    from repro.fleet.telemetry import (
+        FAULT_COUNTERS, ROUND_FIELDS, TELEMETRY_SCHEMA,
+    )
+    from repro.core.engine import RoundMetrics
+
+    art = tmp_path / "fed_train_dryrun.json"
+    monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)
+    assert main(["--dryrun"]) == 0
+    tel = json.loads(art.read_text())["telemetry"]
+    assert tel["schema"] == TELEMETRY_SCHEMA
+    assert tel["round_fields"] == list(ROUND_FIELDS)
+    assert tel["fault_counters"] == list(FAULT_COUNTERS)
+    assert set(tel["fault_counters"]) <= set(RoundMetrics._fields)
+
+
+def test_serve_flag_validations_cli():
+    """--serve requires the snapshot cadence (its publish source) and a
+    checkpoint dir; retention ring must keep >= 2 versions."""
+    for argv in (["--serve"],                                   # no ckpt
+                 ["--serve", "--ckpt-every", "2"],              # no dir
+                 ["--serve", "--ckpt-every", "2", "--ckpt-dir", "/tmp/x",
+                  "--publish-retain", "1"]):
+        with pytest.raises(SystemExit) as e:
+            main(argv + ["--dryrun"])
+        assert e.value.code == 2
+
+
 def test_dryrun_artifact_static_contracts(tmp_path, monkeypatch):
     art = tmp_path / "fed_train_dryrun.json"
     monkeypatch.setattr("repro.launch.fed_train.DRYRUN_ARTIFACT", art)

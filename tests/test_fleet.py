@@ -1,0 +1,463 @@
+"""Fleet subsystem: telemetry store, atomic publication, hot-swap serving,
+health endpoint, and the fed_train --serve driver.
+
+The two contracts the subsystem exists for are tested head-on, not
+asserted in docs:
+
+  * NO TORN READS — a subscriber polling while a publisher races never
+    observes a half-written version (each loaded payload is uniformly one
+    version), and versions are strictly monotone
+    (``test_publisher_no_torn_reads_under_concurrent_publish``).
+  * SWAP ATOMIC UNDER DECODE LOAD — every ``serve_loop`` decode step runs
+    against exactly one complete params version; the swap lands at a step
+    boundary (``test_serve_loop_every_step_sees_one_complete_version``).
+
+The driver e2e additionally pins that --serve is observation-only: same
+config, same seed, with and without the fleet → identical final accuracy.
+"""
+import json
+import os
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.check import check
+from repro.fleet.health import FleetStatus, HealthServer, probe
+from repro.fleet.publisher import (
+    ModelPublisher,
+    ParamsWatch,
+    load_published,
+    read_pointer,
+)
+from repro.fleet.telemetry import (
+    FAULT_COUNTERS,
+    ROUND_FIELDS,
+    TELEMETRY_SCHEMA,
+    TelemetryStore,
+    events,
+    replay,
+    round_rows,
+)
+from repro.launch.serve import ServeStats, serve_loop
+
+
+# --------------------------------------------------------------- telemetry
+class TestTelemetry:
+    def test_round_trip_and_header_schema(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        with TelemetryStore(p, meta={"algo": "fedcm"}) as ts:
+            for i in range(4):
+                ts.round_row(round=i + 1, rounds_per_s=2.5, cohort=8,
+                             loss=0.5 - 0.1 * i, n_dropped=i)
+            ts.event("publish", version=1, step=2)
+        header, rows, truncated = replay(p)
+        assert header["schema"] == TELEMETRY_SCHEMA
+        assert header["kind"] == "fleet-telemetry"
+        assert header["meta"]["algo"] == "fedcm"
+        assert not truncated
+        rnds = round_rows(rows)
+        assert [r["round"] for r in rnds] == [1, 2, 3, 4]
+        # every row is schema-complete: all ROUND_FIELDS present
+        assert all(set(ROUND_FIELDS) <= set(r) for r in rnds)
+        assert rnds[2]["n_dropped"] == 2
+        assert events(rows, "publish")[0]["version"] == 1
+
+    def test_unknown_round_field_refused(self, tmp_path):
+        with TelemetryStore(tmp_path / "t.jsonl") as ts:
+            with pytest.raises(ValueError, match="unknown round-row"):
+                ts.round_row(round=1, not_a_field=3)
+
+    def test_partial_final_line_tolerated_after_kill(self, tmp_path):
+        """A kill mid-append leaves an unterminated (or torn-but-
+        terminated) final line; replay must drop exactly that line."""
+        p = tmp_path / "t.jsonl"
+        with TelemetryStore(p) as ts:
+            for i in range(3):
+                ts.round_row(round=i + 1, rounds_per_s=1.0)
+        with open(p, "ab") as f:  # simulated kill mid-write: no newline
+            f.write(b'{"event":"round","round":4,"rounds_per')
+        header, rows, truncated = replay(p)
+        assert truncated and len(round_rows(rows)) == 3
+        # a terminated-but-unparseable final line is equally tolerated
+        with open(p, "ab") as f:
+            f.write(b"\n")  # terminate the torn json → still unparseable
+        header, rows, truncated = replay(p)
+        assert truncated and len(round_rows(rows)) == 3
+
+    def test_corrupt_middle_line_raises(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        with TelemetryStore(p) as ts:
+            ts.round_row(round=1, rounds_per_s=1.0)
+        with open(p, "ab") as f:
+            f.write(b"garbage-not-json\n")
+        with TelemetryStore(p, resume=True) as ts:
+            pass  # resume validates the header only
+        with open(p, "ab") as f:
+            f.write(b'{"event":"round","round":2,"rounds_per_s":1.0}\n')
+        with pytest.raises(ValueError, match="non-final"):
+            replay(p)
+
+    def test_schema_mismatch_refused(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        p.write_text('{"schema": 999, "kind": "fleet-telemetry"}\n')
+        with pytest.raises(ValueError, match="schema"):
+            replay(p)
+        p.write_text('{"schema": 1, "kind": "something-else"}\n')
+        with pytest.raises(ValueError, match="not a fleet"):
+            replay(p)
+
+    def test_resume_appends_after_existing_rows(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        with TelemetryStore(p, meta={"run": 1}) as ts:
+            ts.round_row(round=1, rounds_per_s=1.0)
+        with TelemetryStore(p, resume=True) as ts:
+            ts.round_row(round=2, rounds_per_s=1.0)
+        header, rows, _ = replay(p)
+        assert header["meta"]["run"] == 1  # original header kept
+        assert [r["round"] for r in round_rows(rows)] == [1, 2]
+
+    def test_fault_counters_are_round_metrics_fields(self):
+        """The telemetry row schema and the engine's RoundMetrics must
+        name the same counters — the --dryrun agreement contract."""
+        from repro.core import RoundMetrics
+
+        assert set(FAULT_COUNTERS) <= set(RoundMetrics._fields)
+        assert set(FAULT_COUNTERS) <= set(ROUND_FIELDS)
+
+
+# --------------------------------------------------------------- publisher
+def _const_params(v: float, n: int = 64):
+    return {"w": np.full((n,), float(v), np.float32),
+            "b": np.full((4,), float(v), np.float32)}
+
+
+class TestPublisher:
+    def test_versions_monotone_and_pointer(self, tmp_path):
+        pub = ModelPublisher(tmp_path, retain=3)
+        assert pub.version == 0 and read_pointer(tmp_path) is None
+        assert pub.publish(_const_params(1), step=10) == 1
+        assert pub.publish(_const_params(2), step=20) == 2
+        ptr = read_pointer(tmp_path)
+        assert ptr["version"] == 2 and ptr["step"] == 20
+        v, params, meta = load_published(str(tmp_path), _const_params(0))
+        assert v == 2 and float(params["w"][0]) == 2.0 and meta["step"] == 20
+
+    def test_retention_ring_bounded(self, tmp_path):
+        pub = ModelPublisher(tmp_path, retain=2)
+        for v in range(1, 7):
+            pub.publish(_const_params(v), step=v)
+        payloads = sorted(n for n in os.listdir(tmp_path)
+                          if n.endswith(".msgpack"))
+        assert payloads == ["step_5.msgpack", "step_6.msgpack"]
+        with pytest.raises(ValueError, match="retain"):
+            ModelPublisher(tmp_path / "x", retain=1)
+
+    def test_reopen_continues_version_sequence(self, tmp_path):
+        ModelPublisher(tmp_path).publish(_const_params(1), step=1)
+        pub2 = ModelPublisher(tmp_path)
+        assert pub2.version == 1
+        assert pub2.publish(_const_params(2), step=2) == 2
+
+    def test_watch_poll_none_when_unchanged(self, tmp_path):
+        w = ParamsWatch(str(tmp_path), template=_const_params(0))
+        assert w.poll() is None  # nothing published yet
+        pub = ModelPublisher(tmp_path)
+        pub.publish(_const_params(1), step=1)
+        got = w.poll()
+        assert got is not None and got[0] == 1
+        assert w.poll() is None  # unchanged → cheap no-op
+        pub.publish(_const_params(2), step=2)
+        pub.publish(_const_params(3), step=3)
+        v, params, _ = w.poll()  # skipped v2 entirely — latest wins
+        assert v == 3 and float(params["w"][0]) == 3.0
+
+    def test_watch_survives_retention_outrunning_it(self, tmp_path):
+        """A watcher that lags more than ``retain`` publishes behind must
+        recover (re-resolve the pointer), not crash on the unlinked file."""
+        pub = ModelPublisher(tmp_path, retain=2)
+        w = ParamsWatch(str(tmp_path), template=_const_params(0))
+        for v in range(1, 9):
+            pub.publish(_const_params(v), step=v)
+        v, params, _ = w.poll()
+        assert v == 8 and float(params["w"][0]) == 8.0
+
+    def test_no_torn_reads_under_concurrent_publish(self, tmp_path):
+        """The headline atomicity contract: a reader polling while a
+        writer publishes at full speed (retention active) never sees a
+        half-written payload — every loaded version is uniformly one
+        constant, equal to its version — and versions strictly increase."""
+        pub = ModelPublisher(tmp_path, retain=2)
+        stop = threading.Event()
+        failures = []
+
+        def writer():
+            try:
+                for v in range(1, 80):
+                    pub.publish(_const_params(v), step=v)
+            finally:
+                stop.set()
+
+        def reader():
+            w = ParamsWatch(str(tmp_path), template=_const_params(0))
+            last = 0
+            try:
+                while not stop.is_set() or w.poll() is not None:
+                    got = w.poll()
+                    if got is None:
+                        continue
+                    v, params, _ = got
+                    leaves = np.concatenate(
+                        [np.ravel(params["w"]), np.ravel(params["b"])]
+                    )
+                    if not (v > last and np.all(leaves == float(v))):
+                        failures.append((v, last, leaves[:4].tolist()))
+                    last = v
+            except Exception as e:  # noqa: BLE001 — recorded for the assert
+                failures.append(repr(e))
+
+        threads = [threading.Thread(target=writer),
+                   threading.Thread(target=reader)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not failures, failures
+
+
+# -------------------------------------------------------------- serve_loop
+class _ScriptedProvider:
+    """Publishes version v at the provider-call count scripted for it."""
+
+    def __init__(self, schedule):  # {call_index: version}
+        self.schedule = dict(schedule)
+        self.calls = 0
+
+    def poll(self):
+        self.calls += 1
+        v = self.schedule.get(self.calls)
+        if v is None:
+            return None
+        return v, {"version_tag": v}, {}
+
+
+class TestServeLoop:
+    def test_every_step_sees_one_complete_version(self):
+        """Atomicity under load: the params a decode step runs against
+        are exactly one published version — the swap happens between
+        steps, never within one — and the served sequence is monotone."""
+        provider = _ScriptedProvider({5: 2, 6: 3, 17: 4})
+        seen = []
+
+        def step(params, st, i):
+            seen.append(params["version_tag"])
+            return st
+
+        params, stats = serve_loop(
+            {"version_tag": 1}, step, params_provider=provider,
+            steps_per_session=10, max_sessions=3, version=1,
+        )
+        assert stats.steps == 30 and stats.sessions == 3
+        assert stats.swaps == 3 and stats.versions == [2, 3, 4]
+        # monotone served versions, one tag per step, no interleaving
+        assert seen == sorted(seen)
+        assert set(seen) == {1, 2, 3, 4}
+        assert params["version_tag"] == stats.served_version == 4
+
+    def test_mid_session_swaps_counted_separately(self):
+        # call 1 = session-boundary check (step 0) → NOT under decode load;
+        # later calls land before step i>0 of a live session → under load
+        provider = _ScriptedProvider({1: 2, 7: 3})
+        _, stats = serve_loop(
+            {"v": 1}, lambda p, st, i: st, params_provider=provider,
+            steps_per_session=10, max_sessions=1, version=1,
+        )
+        assert stats.swaps == 2
+        assert stats.swaps_mid_session == 1
+
+    def test_stop_event_breaks_between_steps(self):
+        stop = threading.Event()
+        count = {"steps": 0}
+
+        def step(p, st, i):
+            count["steps"] += 1
+            if count["steps"] >= 7:
+                stop.set()
+            return st
+
+        _, stats = serve_loop(
+            {"v": 1}, step, steps_per_session=5, max_sessions=None,
+            stop_event=stop,
+        )
+        assert count["steps"] == 7  # stop honored at the next boundary
+        assert stats.sessions == 1  # the interrupted session isn't counted
+
+    def test_static_serving_without_provider(self):
+        _, stats = serve_loop(
+            {"v": 1}, lambda p, st, i: st, steps_per_session=4,
+            max_sessions=2,
+        )
+        assert stats.steps == 8 and stats.swaps == 0
+
+
+# ------------------------------------------------------------------ health
+class TestHealth:
+    def test_healthz_fresh_vs_stale(self, tmp_path):
+        status = FleetStatus(deadline_s=30.0)
+        server = HealthServer(status)
+        try:
+            code, body = probe(server.url)
+            assert code == 503 and body["status"] == "stale"  # no round yet
+            status.round_done(5, rounds_per_s=2.0, cohort=8)
+            code, body = probe(server.url)
+            assert code == 200 and body["status"] == "ok"
+            assert body["last_round"] == 5
+            assert body["last_round_age_s"] < 30.0
+            # age past the deadline → stale again
+            status.update(last_round_unix=time.time() - 31.0)
+            code, body = probe(server.url)
+            assert code == 503
+        finally:
+            server.stop()
+
+    def test_metrics_and_tail_and_404(self, tmp_path):
+        status = FleetStatus(deadline_s=30.0)
+        status.round_done(2, rounds_per_s=4.0, cohort=6)
+        status.bump_counters({"n_dropped": 3, "quorum_skipped": 1})
+        with TelemetryStore(tmp_path / "t.jsonl") as ts:
+            for i in range(5):
+                ts.round_row(round=i + 1, rounds_per_s=4.0)
+            server = HealthServer(status, ts.tail)
+            try:
+                with urllib.request.urlopen(server.url + "/metrics") as r:
+                    text = r.read().decode()
+                assert "fleet_n_dropped_total 3.0" in text
+                assert "fleet_quorum_skipped_total 1.0" in text
+                assert "fleet_rounds_per_second 4.0" in text
+                with urllib.request.urlopen(
+                    server.url + "/telemetry/tail?n=2"
+                ) as r:
+                    tail = json.loads(r.read())
+                assert [t["round"] for t in tail] == [4, 5]
+                code, _ = probe(server.url, "/nope")
+                assert code == 404
+            finally:
+                server.stop()
+
+
+# ------------------------------------------------------- driver end-to-end
+def _tiny_mlp():
+    from repro.models.small import mlp_classifier
+
+    model = mlp_classifier((8, 16, 4))
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)),
+                    jnp.float32)
+    return model, params, x
+
+
+class TestDriver:
+    def test_driver_serves_publishes_and_records(self, tmp_path):
+        from repro.fleet.driver import FleetDriver
+
+        model, params, x = _tiny_mlp()
+        fleet = FleetDriver(ckpt_dir=str(tmp_path), deadline_s=60.0,
+                            meta={"algo": "test"})
+        assert fleet.publish(0, params) == 1
+        fleet.start_serving(model.apply, template=params, batch_x=x,
+                            steps_per_session=64, step_sleep_s=0.002)
+        # publish two more versions while decode is running
+        for step in (2, 4):
+            time.sleep(0.15)
+            fleet.publish(step, jax.tree_util.tree_map(
+                lambda a: a + 0.1, params))
+        host = {
+            "loss": np.asarray([0.5, 0.4]), "n_active": np.asarray([4, 5]),
+            "n_dropped": np.asarray([1.0, 0.0]),
+        }
+        fleet.record_chunk(start_round=0, host=host, seconds=0.5,
+                           eval_acc=0.75, published_version=3)
+        assert fleet.drain_swaps(timeout_s=20.0)
+        summary = fleet.stop()
+        assert summary["swaps"] >= 2
+        assert summary["served_version"] == 3
+        assert summary["health_status"] == 200
+        header, rows, truncated = replay(fleet.telemetry.path)
+        assert not truncated
+        rnds = round_rows(rows)
+        assert [r["round"] for r in rnds] == [1, 2]
+        assert rnds[0]["n_dropped"] == 1.0
+        assert rnds[1]["eval_acc"] == 0.75
+        assert rnds[1]["published_version"] == 3
+        assert [e["version"] for e in events(rows, "publish")] == [1, 2, 3]
+        s = events(rows, "serve_summary")[-1]
+        assert s["swaps"] >= 2 and s["steps"] > 0
+        hp = events(rows, "health_probe")[-1]
+        assert hp["status"] == 200 and hp["last_round_age_s"] < 60.0
+        # the checker CI runs agrees
+        assert check(fleet.telemetry.path, min_rounds=2, min_swaps=1,
+                     require_health=True) == []
+
+    def test_check_fails_loudly(self, tmp_path):
+        with TelemetryStore(tmp_path / "t.jsonl") as ts:
+            ts.round_row(round=1, rounds_per_s=1.0)
+        fails = check(str(tmp_path / "t.jsonl"), min_rounds=3, min_swaps=2,
+                      require_health=True)
+        assert len(fails) == 3
+        assert any("round rows" in f for f in fails)
+        assert any("serve_summary" in f for f in fails)
+        assert any("health" in f for f in fails)
+
+
+class TestFedTrainServe:
+    def test_serve_run_matches_non_serve_run(self, tmp_path):
+        """The fleet loop end-to-end through fed_train's chunk loop — and
+        the observation-only contract: the SAME tiny run with and without
+        --serve reaches the identical final accuracy."""
+        from repro.configs.base import FedConfig
+        from repro.launch.fed_train import run_federated
+
+        def run(serve: bool, ckpt_dir: str):
+            cfg = FedConfig(algo="fedcm", num_clients=12, cohort_size=4,
+                            local_steps=2, rounds=4, seed=3)
+            return run_federated(
+                cfg, 0.6, eval_every=2, seed=3, echo=False,
+                n_train=2_000, n_test=500,
+                ckpt_every=2, ckpt_dir=ckpt_dir, serve=serve,
+                round_deadline_s=60.0,
+            )
+
+        acc_plain, _ = run(False, str(tmp_path / "plain"))
+        acc_serve, _ = run(True, str(tmp_path / "fleet"))
+        assert acc_serve == acc_plain  # fleet is observation-only
+        path = tmp_path / "fleet" / "telemetry.jsonl"
+        header, rows, truncated = replay(path)
+        assert not truncated
+        rnds = round_rows(rows)
+        assert [r["round"] for r in rnds] == [1, 2, 3, 4]
+        assert all(r["rounds_per_s"] > 0 for r in rnds)
+        assert all(r["cohort"] > 0 for r in rnds)
+        # cadence evals land on chunk-final rounds
+        assert rnds[1]["eval_acc"] is not None
+        assert rnds[3]["eval_acc"] == pytest.approx(acc_serve, abs=1e-6)
+        # publications: v1 init + one per ckpt boundary (rounds 2 and 4)
+        assert [e["version"] for e in events(rows, "publish")] == [1, 2, 3]
+        assert events(rows, "health_probe")[-1]["status"] == 200
+        assert check(str(path), min_rounds=4, require_health=True) == []
+
+    def test_serve_flag_validations(self):
+        from repro.launch.fed_train import main
+
+        with pytest.raises(SystemExit) as e:  # needs --ckpt-every
+            main(["--dryrun", "--serve"])
+        assert e.value.code == 2
+        with pytest.raises(SystemExit):  # needs --ckpt-dir
+            main(["--dryrun", "--serve", "--ckpt-every", "2"])
+        with pytest.raises(SystemExit):  # retain floor
+            main(["--dryrun", "--serve", "--ckpt-every", "2",
+                  "--ckpt-dir", "/tmp/x", "--publish-retain", "1"])
