@@ -47,6 +47,14 @@ Three workloads, all in the artifact:
   ``fed_direction``, fold rows → ``server_update``, pure post-steps)
   actually executes, and what each costs relative to fedcm.  A spec that
   silently falls off the kernel route shows up here as an outlier.
+* ``uplink_compression``: rounds/s + wire accounting per uplink
+  compression kind (none/int8/bf16/topk) on the fused dequant-fold
+  route — per-client bytes/round, the f32-relative reduction, and the
+  async ring's per-slot in-flight bytes (the ring carries the compressed
+  representation, so in-flight memory shrinks with the wire).
+* ``store_prefetch``: the host-store loop synchronous vs double-buffered
+  (``cfg.store_prefetch``) — what overlapping the next cohort's store
+  gather + host batch build with the current round's device step buys.
 
 Timing is interleaved min-of-N (alternating engines) so slow drift on a
 shared host cannot bias one path.  Artifact:
@@ -88,6 +96,11 @@ PARTICIPATION_ARTIFACT = (
 #: into the trajectory when current
 FAULT_ARTIFACT = (
     Path(__file__).resolve().parent / "artifacts" / "fault_tolerance.json"
+)
+#: convergence-vs-uplink-bits curves (compressed wire engine); folded
+#: into the trajectory when current
+BITS_ARTIFACT = (
+    Path(__file__).resolve().parent / "artifacts" / "convergence_bits.json"
 )
 #: the fleet-smoke job's per-round telemetry JSONL (repro.fleet): when a
 #: `fed_train --serve` run at this rev wrote one here, its per-round
@@ -298,6 +311,156 @@ def _measure_algo_sweep(rounds, quiet, dims=(32, 64, 64, 10), cohort=8, K=2, B=1
     return result
 
 
+def _measure_compression(rounds, quiet, kinds=("none", "int8", "bf16", "topk")):
+    """rounds/s + wire accounting per uplink compression kind.
+
+    fedcm on the paper_scaled shape, flat + fused kernel (the dequant-fold
+    route), one timed fused scan per kind.  Three numbers per kind, all
+    from the SAME accounting the engine bills at runtime
+    (``repro.core.compress``): per-client uplink bytes/round (from the
+    run's ``bytes_up`` metric), the f32-relative reduction, and the async
+    ring's per-slot in-flight bytes for the wire planes at this cohort —
+    the D×cohort ring carries the COMPRESSED representation, so in-flight
+    memory shrinks by the same factor the wire does."""
+    import numpy as np
+
+    from repro.configs.base import CompressionConfig
+    from repro.core.compress import uplink_bytes_per_client
+    from repro.core.registry import get_algorithm
+
+    wl = WORKLOADS["paper_scaled"]
+    dims, cohort, K, B = wl["dims"], wl["cohort"], wl["K"], wl["B"]
+    x, y, *_ = make_synthetic_classification(
+        n_classes=10, dim=dims[0], n_train=6400, n_test=10
+    )
+    model = mlp_classifier(dims)
+    loss_fn = classification_loss(model.apply)
+    spec_wire = get_algorithm("fedcm").wire_uplink_planes
+    result = {"workload": {
+        "algo": "fedcm", "num_clients": 64, "cohort_size": cohort,
+        "local_steps": K, "batch_size": B, "rounds": rounds,
+        "model": f"mlp {len(dims) - 1} layers ({2 * (len(dims) - 1)} leaves)",
+        "path": "flat + fused kernels (dequant fold for int8/bf16)",
+    }, "kinds": {}}
+    base_bytes = None
+    for kind in kinds:
+        comp = (None if kind == "none"
+                else CompressionConfig(kind=kind, topk_frac=0.05))
+        cfg = FedConfig(algo="fedcm", num_clients=64, cohort_size=cohort,
+                        local_steps=K, participation="fixed",
+                        use_fused_kernel=True, compression=comp)
+        eng = FederatedEngine(cfg, loss_fn, batch_size=B)
+        data = FederatedData(x, y, cfg.num_clients, seed=0)
+
+        def fresh():
+            return eng.init(model.init(jax.random.PRNGKey(0)),
+                            jax.random.PRNGKey(1))
+
+        st, ms = eng.run_rounds(fresh(), data, rounds)  # warm/compile
+        _block(st)
+        t0 = time.perf_counter()
+        st, ms = eng.run_rounds(fresh(), data, rounds)
+        _block(st)
+        dt = time.perf_counter() - t0
+        # bytes_up = n_active × per-client wire bytes; fixed participation
+        # here, so n_active == cohort every round
+        up = int(np.asarray(ms.bytes_up)[-1]) // cohort
+        if base_bytes is None:
+            base_bytes = up
+        # ring slot = the wire planes of one in-flight cohort, as stored
+        # (compressed on the kernel path) — size from the same pricing fn
+        size = sum(int(l.size) for l in jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+        ring = cohort * uplink_bytes_per_client(comp, spec_wire, size, size * 4)
+        result["kinds"][kind] = {
+            "rounds_per_s": round(rounds / dt, 2),
+            "uplink_bytes_per_client": up,
+            "reduction_x": round(base_bytes / up, 2),
+            "ring_bytes_per_slot": ring,
+        }
+    f32_ring = result["kinds"][kinds[0]]["ring_bytes_per_slot"]
+    for k in result["kinds"]:
+        result["kinds"][k]["ring_reduction_x"] = round(
+            f32_ring / result["kinds"][k]["ring_bytes_per_slot"], 2)
+    if not quiet:
+        print(f"== uplink_compression ({result['workload']['model']}, "
+              f"C={cohort}, K={K}, kernel path) ==")
+        for k, r in result["kinds"].items():
+            print(f"  {k:<5} {r['rounds_per_s']:>8} rounds/s  "
+                  f"{r['uplink_bytes_per_client']:>7} B/client "
+                  f"({r['reduction_x']}x)  ring/slot "
+                  f"{r['ring_bytes_per_slot']:>8} B ({r['ring_reduction_x']}x)")
+    return result
+
+
+def _measure_store_prefetch(rounds, alts, quiet, n_clients=256, cohort=16):
+    """Host-store loop: synchronous vs double-buffered (store_prefetch).
+
+    scaffold (client state makes the store gather/scatter real work) on the
+    paper_scaled shape through ``run_rounds_store``; the prefetch loop
+    overlaps the NEXT cohort's store gather + host batch build with the
+    current round's device step.  The two loops are bitwise-identical by
+    contract (tests assert it); this records what the overlap buys in
+    rounds/s — interleaved min-of-N, plus the drift-robust median of
+    pairwise per-alternation ratios."""
+    wl = WORKLOADS["paper_scaled"]
+    dims, K, B = wl["dims"], wl["K"], wl["B"]
+    x, y, *_ = make_synthetic_classification(
+        n_classes=10, dim=dims[0], n_train=6400, n_test=10
+    )
+    model = mlp_classifier(dims)
+    loss_fn = classification_loss(model.apply)
+    engines = {}
+    for key, pf in (("sync", False), ("prefetch", True)):
+        cfg = FedConfig(algo="scaffold", num_clients=n_clients,
+                        cohort_size=cohort, local_steps=K,
+                        participation="fixed", use_fused_kernel=True,
+                        population_store="host", store_prefetch=pf)
+        engines[key] = FederatedEngine(cfg, loss_fn, batch_size=B)
+    data = FederatedData(x, y, n_clients, seed=0)
+
+    def run(eng):
+        st = eng.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1))
+        st, _ = eng.run_rounds(st, data, rounds)
+        _block(st)
+
+    for e in engines.values():  # warm/compile
+        run(e)
+    times = {k: [] for k in engines}
+    for _ in range(alts):
+        for k, e in engines.items():
+            t0 = time.perf_counter()
+            run(e)
+            times[k].append(time.perf_counter() - t0)
+    best = {k: min(v) for k, v in times.items()}
+    pairwise = sorted(s / p for s, p in zip(times["sync"], times["prefetch"]))
+    result = {
+        "workload": {
+            "algo": "scaffold", "num_clients": n_clients,
+            "cohort_size": cohort, "local_steps": K, "batch_size": B,
+            "rounds": rounds, "population_store": "host",
+            "timing": f"interleaved min/median-pairwise of {alts}",
+        },
+        "sync_s": round(best["sync"], 4),
+        "prefetch_s": round(best["prefetch"], 4),
+        "sync_rounds_per_s": round(rounds / best["sync"], 2),
+        "prefetch_rounds_per_s": round(rounds / best["prefetch"], 2),
+        "prefetch_vs_sync": round(best["sync"] / best["prefetch"], 2),
+        "prefetch_vs_sync_median": round(pairwise[len(pairwise) // 2], 2),
+    }
+    if not quiet:
+        print(f"== store_prefetch (scaffold host store, N={n_clients}, "
+              f"C={cohort}) ==")
+        print(f"  sync loop:     {best['sync']:.3f}s  "
+              f"({result['sync_rounds_per_s']} rounds/s)")
+        print(f"  prefetch loop: {best['prefetch']:.3f}s  "
+              f"({result['prefetch_rounds_per_s']} rounds/s, "
+              f"{result['prefetch_vs_sync']}x min / "
+              f"{result['prefetch_vs_sync_median']}x median vs sync)")
+    return result
+
+
 def write_trajectory_summary(result: dict) -> dict:
     """Append this run's rounds/s-per-workload row to the top-level
     ``BENCH_fused_rounds.json`` trajectory (one entry per commit — an
@@ -317,7 +480,12 @@ def write_trajectory_summary(result: dict) -> dict:
             "paper_scaled_flat": result["paper_scaled"]["flat_fused_rounds_per_s"],
             "async_d2": result["async_pipeline"]["async_d2_rounds_per_s"],
             "algo_sweep": result["algo_sweep"]["rounds_per_s"],
+            "store_prefetch": result["store_prefetch"]["prefetch_rounds_per_s"],
+            "store_sync": result["store_prefetch"]["sync_rounds_per_s"],
         },
+        # wire accounting per compression kind (bytes/client, f32-relative
+        # reduction, async ring in-flight bytes/slot) + kernel-path rounds/s
+        "uplink_compression": result["uplink_compression"]["kinds"],
     }
     if COHORT_ARTIFACT.exists():
         cs = json.loads(COHORT_ARTIFACT.read_text())
@@ -363,6 +531,21 @@ def write_trajectory_summary(result: dict) -> dict:
         else:
             entry["fault_tolerance"] = {
                 "stale_rev": ft.get("rev") if isinstance(ft, dict) else "pre-harness"
+            }
+    if BITS_ARTIFACT.exists():
+        cb = json.loads(BITS_ARTIFACT.read_text())
+        if isinstance(cb, dict) and cb.get("rev") == entry["rev"]:
+            # convergence-vs-bits: acc per (algo, kind) + wire accounting —
+            # the compressed-uplink harness's headline numbers
+            entry["convergence_bits"] = [
+                {k: row[k] for k in ("algo", "kind", "acc_final",
+                                     "acc_vs_f32", "uplink_bytes_per_client",
+                                     "reduction_x")}
+                for row in cb.get("rows", [])
+            ]
+        else:
+            entry["convergence_bits"] = {
+                "stale_rev": cb.get("rev") if isinstance(cb, dict) else "pre-harness"
             }
     if FLEET_ARTIFACT.exists():
         from repro.fleet.telemetry import events, replay, round_rows
@@ -411,6 +594,10 @@ def main(rounds: int = 60, alts: int = 8, quiet: bool = False) -> dict:
     }
     result["async_pipeline"] = _measure_async(rounds, alts, quiet)
     result["algo_sweep"] = _measure_algo_sweep(rounds, quiet)
+    result["uplink_compression"] = _measure_compression(rounds, quiet)
+    result["store_prefetch"] = _measure_store_prefetch(
+        rounds, max(2, alts // 2), quiet
+    )
     # legacy top-level keys mirror the headline workload
     head = result["update_bound"]
     for k in ("sequential_s", "flat_fused_s", "tree_fused_s", "speedup",

@@ -47,6 +47,14 @@ def main() -> int:
         pr(rounds=rounds, seeds=seeds)
 
     print("\n" + "=" * 72)
+    print("BENCHMARK 3b — convergence vs uplink bits (compressed wire)")
+    print("=" * 72)
+    if not args.skip_fed:
+        from benchmarks.convergence_bits import main as cb
+
+        cb(rounds=20 if args.quick else 40)
+
+    print("\n" + "=" * 72)
     print("BENCHMARK 4/6 — kernel accounting + correctness at size")
     print("=" * 72)
     from benchmarks.kernel_microbench import main as km

@@ -128,7 +128,7 @@ def load_flat(directory: str, step: Optional[int] = None) -> Tuple[Dict[str, Any
 
 
 def save_fed_run(directory: str, step: int, state: Any, population: Any = None,
-                 meta: Optional[Dict] = None) -> str:
+                 residuals: Any = None, meta: Optional[Dict] = None) -> str:
     """One atomic snapshot of a whole federated run.
 
     Packs ``{"state": FedState}`` plus, when a host population store is
@@ -136,42 +136,61 @@ def save_fed_run(directory: str, step: int, state: Any, population: Any = None,
     ``step_<N>.msgpack`` — the two halves publish together or not at all,
     so a kill between "state written" and "store written" cannot leave a
     resumable-but-inconsistent pair on disk.  ``population`` accepts the
-    store object (``to_pytree`` is called) or an already-packed dict."""
+    store object (``to_pytree`` is called) or an already-packed dict.
+
+    ``residuals`` packs the top-k error-feedback residual store the same
+    way under a ``"residuals"`` key (``FederatedEngine.residual_population``
+    when compression runs against a host store).  RESIDENT residuals need
+    no parameter: they are a leaf of the FedState and ride the ``state``
+    template like every other plane."""
     tree: Dict[str, Any] = {"state": state}
     if population is not None:
         tree["population"] = (
             population.to_pytree() if hasattr(population, "to_pytree") else population
         )
+    if residuals is not None:
+        tree["residuals"] = (
+            residuals.to_pytree() if hasattr(residuals, "to_pytree") else residuals
+        )
     return save_checkpoint(directory, step, tree, meta=meta)
 
 
-def load_fed_run(directory: str, step: Optional[int], like_state: Any,
-                 num_clients: Optional[int] = None) -> Tuple[Any, Any, Dict]:
-    """Restore a ``save_fed_run`` snapshot → ``(state, population, meta)``.
-
-    The FedState half restores through the template path (``like_state``
-    fixes structure and dtypes; extra ``population/…`` keys in the payload
-    are ignored by construction).  The population half — whose packed
-    ``(M, P)`` shape no template can predict — restores template-free via
-    ``load_flat`` and, when ``num_clients`` is given, comes back as a
-    rebuilt ``HostPopulationStore``; otherwise as the raw packed dict.
-    ``population`` is ``None`` when the snapshot carried no store."""
-    state, meta = load_checkpoint(directory, step, {"state": like_state})
-    flat, _ = load_flat(directory, step if step is not None else meta.get("step"))
-    pop_tree = {
+def _store_tree(flat: Dict[str, Any], prefix: str,
+                num_clients: Optional[int]) -> Any:
+    """Rebuild one packed store half (``population/…`` or ``residuals/…``)."""
+    packed = {
         k.split("/", 1)[1]: np.asarray(v)
         for k, v in flat.items()
-        if k.startswith("population/")
+        if k.startswith(prefix + "/")
     }
-    population: Any = None
-    if pop_tree:
-        if num_clients is not None:
-            from repro.data.population import HostPopulationStore
+    if not packed:
+        return None
+    if num_clients is not None:
+        from repro.data.population import HostPopulationStore
 
-            population = HostPopulationStore.from_pytree(pop_tree, num_clients)
-        else:
-            population = pop_tree
-    return state["state"], population, meta
+        return HostPopulationStore.from_pytree(packed, num_clients)
+    return packed
+
+
+def load_fed_run(directory: str, step: Optional[int], like_state: Any,
+                 num_clients: Optional[int] = None) -> Tuple[Any, Any, Any, Dict]:
+    """Restore a ``save_fed_run`` snapshot → ``(state, population, residuals,
+    meta)``.
+
+    The FedState half restores through the template path (``like_state``
+    fixes structure and dtypes; extra ``population/…``/``residuals/…`` keys
+    in the payload are ignored by construction) — a template WITH a
+    resident ``residuals`` plane restores it like any other leaf.  The
+    store halves — whose packed ``(M, P)`` shapes no template can predict
+    — restore template-free via ``load_flat`` and, when ``num_clients`` is
+    given, come back as rebuilt ``HostPopulationStore``s; otherwise as the
+    raw packed dicts.  Either is ``None`` when the snapshot carried no
+    such store."""
+    state, meta = load_checkpoint(directory, step, {"state": like_state})
+    flat, _ = load_flat(directory, step if step is not None else meta.get("step"))
+    population = _store_tree(flat, "population", num_clients)
+    residuals = _store_tree(flat, "residuals", num_clients)
+    return state["state"], population, residuals, meta
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -230,6 +230,41 @@ class FaultConfig:
 
 
 @dataclass(frozen=True)
+class CompressionConfig:
+    """Uplink compression as pure config data (repro.core.compress).
+
+    Every compressed representation is a plane transform applied to the
+    cohort uplink between client launch and server fold — on the sync,
+    async-ring, cohort-sharded, and host-store paths alike — so the
+    f32 ``(C, P)`` uplink never has to exist on the wire (or in the
+    async ring).  ``compression=None`` on :class:`FedConfig` traces no
+    compression code at all: those paths stay f32-bitwise against the
+    uncompressed engine.
+
+    Kinds:
+      ``"int8"`` — per-row absmax-scaled stochastic-rounded int8
+                   (unbiased: E[dequant(q)] = x); 1 byte/element + one
+                   f32 scale per client row.
+      ``"bf16"`` — round-to-nearest-even bfloat16; 2 bytes/element.
+      ``"topk"`` — magnitude top-k sparsification (k = topk_frac·P)
+                   with error-feedback residuals: what a client does
+                   not send this round is carried in a per-client
+                   residual plane and added to its next uplink.  The
+                   residual stream rides the population machinery
+                   (resident ``(N, P)`` plane or host store) and is
+                   checkpointed with the run.
+    """
+
+    kind: str = "int8"  # int8 | bf16 | topk
+    # fraction of plane elements kept per client row under "topk"
+    topk_frac: float = 0.01
+    # stochastic-rounding stream seed — independent of FedConfig.seed
+    # and keyed by absolute round, so kill/resume replays the identical
+    # quantization noise and cohort-sharded runs agree with unsharded
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """Federated round configuration (paper §6.1 defaults)."""
 
@@ -347,6 +382,17 @@ class FedConfig:
     # empty rounds degrade to guarded no-ops; default off preserves the
     # legacy keep-first sampler bitwise.
     allow_empty_cohort: bool = False
+    # ---- uplink compression --------------------------------------------
+    # uplink compression model (None = no compression code traced; see
+    # CompressionConfig).  Requires use_flat_plane — the transforms are
+    # flat-plane ops; the tree path stays the uncompressed oracle.
+    compression: Optional[CompressionConfig] = None
+    # host-store loop double-buffering: prefetch the NEXT round's cohort
+    # sample + host batch generation (and, optimistically, its store
+    # gather) on a background thread while the current round runs on
+    # device.  Bitwise-identical to the synchronous loop — overlapping
+    # rows are re-gathered after the scatter they depend on.
+    store_prefetch: bool = True
 
 
 @dataclass(frozen=True)

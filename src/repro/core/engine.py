@@ -155,11 +155,30 @@ through unchanged, client-state writes suppressed — surfaced as
 exponential backoff).  ``fault=None`` traces none of this and stays
 f32-bitwise against the fault-free engine; in the async ring, faulted
 planes ride the D−1 rounds to their fold like any other uplink.
+
+Uplink compression (``cfg.compression`` / a spec's ``uplink_compression``):
+wire encoding is pure config/spec data
+(``repro.configs.base.CompressionConfig``, realized by
+``repro.core.compress``) spliced between fault injection and fold on
+every path.  Stochastic-rounded int8 and bf16 planes reach the server
+fold COMPRESSED — the fused ``dequant_server_update`` kernel dequantizes
+inside the accumulation pass, the async ring carries the compressed
+representation (4–8× less in-flight memory at depth D), and the
+cohort-sharded ``all_to_all`` moves int8/bf16 payloads instead of f32.
+Top-k sparsification applies to the delta plane only, with error
+feedback: the unsent remainder accumulates per client in
+``FedState.residuals`` (resident ``(N, P)``) or a host residual store,
+and joins that client's next uplink.  ``compression=None`` traces none
+of this and stays f32-bitwise against the pre-compression engine;
+payload accounting (``RoundMetrics.bytes_up``) reflects the active
+encoding.
 """
 from __future__ import annotations
 
 import math
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -169,7 +188,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import FedConfig
+from repro.configs.base import CompressionConfig, FedConfig
 from repro.core.algorithms import (
     Algorithm,
     ClientOutputs,
@@ -179,6 +198,18 @@ from repro.core.algorithms import (
     get_algorithm,
     server_init,
     sparse_client_finalize,
+)
+from repro.core.compress import (
+    QPlane,
+    TopKPlane,
+    as_qplane,
+    compress_plane,
+    decompress_plane,
+    error_feedback_topk,
+    plane_key,
+    round_key,
+    uplink_bytes_per_client,
+    validate_compression,
 )
 from repro.core.faults import (
     corrupt_uplink,
@@ -252,6 +283,9 @@ class FedState(NamedTuple):
     client_states: Any  # stacked (N, …) or None
     rng: jax.Array
     master: Optional[FlatMaster] = None  # flat-engine f32 master planes
+    # top-k error-feedback residuals: resident (N, P) f32, or None (no
+    # top-k compression / host residual store carries the rows instead)
+    residuals: Optional[jax.Array] = None
 
 
 class RoundMetrics(NamedTuple):
@@ -578,6 +612,23 @@ class FederatedEngine:
         self.batch_size = batch_size
         self.client_sharding = client_sharding
         self.analysis_unroll = False  # dry-run analysis form
+        # ---- uplink compression (wire encoding, launch → fold) ----
+        # cfg.compression wins; otherwise a spec that declares its own
+        # wire format (registry uplink_compression) supplies the default.
+        comp = getattr(cfg, "compression", None)
+        if comp is None and self.algo.uplink_compression is not None:
+            comp = CompressionConfig(kind=self.algo.uplink_compression)
+        if comp is not None:
+            validate_compression(comp)
+            if not cfg.use_flat_plane:
+                raise ValueError(
+                    "uplink compression is a flat-plane transform (it "
+                    "quantizes (C, P) cohort planes) — set "
+                    "cfg.use_flat_plane=True (the tree path stays the "
+                    "uncompressed oracle)"
+                )
+        self.compression = comp
+        self.residual_population = None  # host store for top-k residuals
         # ---- population store (out-of-core client state) ----
         # "host" keeps per-client state rows in a sparse host store
         # (repro.data.population.HostPopulationStore, created by init());
@@ -683,12 +734,27 @@ class FederatedEngine:
             self.population = make_population_store(
                 self.cfg, FlatSpec.from_tree(params).size
             )
+        # top-k error-feedback residuals are a per-client state stream of
+        # their own: resident (N, P) zeros, or a second host store whose
+        # unwritten rows read as zeros (same init semantics)
+        residuals = None
+        if self._ef_residuals:
+            size = FlatSpec.from_tree(params).size
+            if self.population_store == "resident":
+                residuals = jnp.zeros(
+                    (self.cfg.num_clients, size), jnp.float32
+                )
+            else:
+                self.residual_population = make_population_store(
+                    self.cfg, size
+                )
         state = FedState(
             params=params,
             server=server_init(params, self.cfg.momentum_dtype,
                                needs_second_moment=self.algo.needs_second_moment),
             client_states=client_state_init(params, self.cfg),
             rng=rng,
+            residuals=residuals,
         )
         # flat engine + sub-f32 leaves: attach the f32 master planes up
         # front so every later call sees one stable treedef (no master→
@@ -716,24 +782,40 @@ class FederatedEngine:
         """True when rounding plane→leaves loses bits (any non-f32 leaf)."""
         return any(np.dtype(l.dtype) != np.float32 for l in spec.leaves)
 
+    @property
+    def _ef_residuals(self) -> bool:
+        """True when top-k compression carries an error-feedback stream."""
+        return self.compression is not None and self.compression.kind == "topk"
+
     # -------------------------------------------------- payload accounting
     def payload_bytes(self, params) -> Dict[str, int]:
         """Per-client per-round communication in bytes (§4.2 discussion)."""
+        if self.compression is not None:
+            spec = FlatSpec.from_tree(params)
+            return self._payload_from_nbytes(spec.nbytes, spec.size)
         return self._payload_from_nbytes(tree_bytes(params))
 
-    def _payload_from_nbytes(self, P: int) -> Dict[str, int]:
+    def _payload_from_nbytes(self, P: int, size: Optional[int] = None) -> Dict[str, int]:
         """Payload accounting from a total byte count — the flat path charges
         ``FlatSpec.nbytes`` (the wire dtypes), identical to ``tree_bytes``.
         Wire shapes are DERIVED from the spec's state-plane flags (§4.2) via
         ``AlgorithmSpec.wire_uplink_planes`` — the same accounting
-        ``fed_train --list-algos`` prints per algorithm."""
+        ``fed_train --list-algos`` prints per algorithm.  Under active
+        compression the uplink charge is bytes-on-the-wire of the encoded
+        planes (``repro.core.compress.uplink_bytes_per_client``; ``size``
+        is the plane element count the flat callers provide)."""
         down = P  # x_t always goes down
         if self.algo.needs_momentum_broadcast:
             down += P  # Δ_t (fedcm/mimelite) or c (scaffold)
         # Δ_i always; +Δc_i iff the state plane goes over the wire
         # (SCAFFOLD — feddyn's λ_i never leaves the client); +full-batch
         # gradient iff needs_full_grad (MimeLite)
-        up = P * len(self.algo.wire_uplink_planes)
+        if self.compression is not None and size is not None:
+            up = uplink_bytes_per_client(
+                self.compression, self.algo.wire_uplink_planes, size, P
+            )
+        else:
+            up = P * len(self.algo.wire_uplink_planes)
         return {"down_per_client": down, "up_per_client": up}
 
     # -------------------------------------------------- cohort sharding
@@ -782,7 +864,8 @@ class FederatedEngine:
                     mst.client_states is not None
                     else spec.ravel(fcst, batch_dims=1))
         params = mst.params if mst is not None else spec.ravel(state.params)
-        return FedState(params, fsrv, fcst, state.rng)
+        return FedState(params, fsrv, fcst, state.rng,
+                        residuals=state.residuals)
 
     def _unravel_state(self, fstate: FedState, spec: FlatSpec) -> FedState:
         """Flat-plane state → tree state (leaf shapes AND dtypes restored).
@@ -805,7 +888,8 @@ class FederatedEngine:
                 second_moment=fstate.server.second_moment,
                 client_states=fstate.client_states if cst_is_plane else None,
             )
-        return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng, master)
+        return FedState(spec.unravel(fstate.params), srv, cst, fstate.rng,
+                        master, residuals=fstate.residuals)
 
     def _flat_cohort_pass(self, fstate: FedState, batches, ids, mask,
                           full_batches, spec: FlatSpec, m_t, eta_l,
@@ -1144,9 +1228,134 @@ class FederatedEngine:
             [leaf_mean(l) for l in jax.tree_util.tree_leaves(x)], jnp.float32
         )
 
+    # -------------------------------------------------- uplink compression
+    def _residual_rows_for(self, fstate: FedState, ids, residual_rows):
+        """The cohort's error-feedback residual rows (top-k only): the
+        host loop pre-gathers them (``residual_rows``); the resident path
+        gathers from ``fstate.residuals`` here.  Padded to the sharded
+        cohort with exact-zero rows (pad rows never transmit)."""
+        if not self._ef_residuals:
+            return None
+        rows = residual_rows
+        if rows is None:
+            if fstate.residuals is None:
+                raise ValueError(
+                    "topk compression carries an error-feedback residual "
+                    "stream — call eng.init(params, rng) so "
+                    "FedState.residuals (or the host residual store) is "
+                    "allocated before stepping"
+                )
+            rows = fstate.residuals[ids]
+        if self._sharded:
+            rows = self._pad_cohort(rows, mode="zero")
+        return rows
+
+    def _compress_uplink(self, t, outs, w, residual_rows, spec: FlatSpec,
+                         ring: bool = False):
+        """Wire-encode the cohort's uplink planes — the splice between
+        fault injection and server fold on every path.  Returns
+        ``(outs, new_residual_rows)`` (residual rows ``None`` except under
+        top-k).  ``compression=None`` returns the uplink UNTOUCHED without
+        tracing anything — compression-free programs stay f32-bitwise the
+        pre-compression engine's.
+
+        Kernel-fold path: int8/bf16 planes come back as :class:`QPlane`
+        and reach the fold COMPRESSED (the fused dequant kernel consumes
+        them; under cohort sharding the ``all_to_all`` then moves the
+        int8/bf16 payload).  ``state_delta`` is additionally needed dense
+        by the client-state scatter, so it is decoded immediately —
+        except on the async ring (``ring=True``), where it rides
+        compressed until fold time (the in-flight memory win) and
+        ``_fold_async_slot`` decodes it.  Top-k sparsifies the delta
+        plane only, through the error-feedback accumulator; other wire
+        planes ride f32 (sparsifying a state stream without its own
+        residual would bias the stored state — the registry refuses specs
+        declaring it).
+
+        jnp/server_fn paths: every wire plane round-trips through its
+        wire representation to dense (what arrived on the wire IS what
+        the oracle folds) and downstream code runs unchanged.  ``w`` is
+        the post-fault weight row (padded under sharding) gating the
+        error-feedback update: a client that did not transmit keeps its
+        residual."""
+        comp = self.compression
+        if comp is None:
+            return outs, None
+        cfg, algo = self.cfg, self.algo
+        wire = algo.wire_uplink_planes
+        key = round_key(comp, t)
+        kernel_fold = cfg.use_fused_kernel and algo.server_fn is None
+
+        if not cfg.use_fused_kernel:
+            # jnp path: planes are (C, leaf…) trees — encode/decode on the
+            # flat representation, hand the dense trees back
+            planes = {}
+            new_rows = None
+            for name in ("delta", "state_delta", "extra"):
+                tv = getattr(outs, name)
+                if tv is None or name not in wire:
+                    continue
+                plane = spec.ravel(tv, batch_dims=1)
+                if comp.kind == "topk":
+                    if name != "delta":
+                        continue  # non-delta wire planes ride f32
+                    _, recon, new_rows = error_feedback_topk(
+                        comp, plane, residual_rows, w, spec.size
+                    )
+                    dense = recon
+                else:
+                    dense = decompress_plane(
+                        compress_plane(comp, plane, plane_key(key, name))
+                    )
+                planes[name] = spec.unravel(dense)
+            return outs._replace(**planes), new_rows
+
+        planes = {}
+        new_rows = None
+        for name in ("delta", "state_delta", "extra"):
+            pv = getattr(outs, name)
+            if pv is None or name not in wire:
+                continue
+            if comp.kind == "topk":
+                if name != "delta":
+                    continue  # non-delta wire planes ride f32
+                rep, recon, new_rows = error_feedback_topk(
+                    comp, pv, residual_rows, w, spec.size
+                )
+                # the ring carries the sparse rep (k ≪ P in-flight);
+                # everything else folds the dense decoded payload
+                planes[name] = rep if (ring and kernel_fold) else recon
+                continue
+            rep = as_qplane(compress_plane(comp, pv, plane_key(key, name)))
+            if not kernel_fold:
+                # server_fn escape hatch reduces via _masked_pmean: decode
+                planes[name] = decompress_plane(rep)
+            elif name == "state_delta" and not ring:
+                # fold consumes the decoded payload AND the client-state
+                # scatter needs the same dense rows — decode once here
+                planes[name] = decompress_plane(rep)
+            else:
+                planes[name] = rep
+        return outs._replace(**planes), new_rows
+
+    def _decode_ring_entry(self, entry: CohortUplink, spec: FlatSpec):
+        """Decode a ring entry's compressed planes at fold time.  The
+        sparse top-k delta densifies (the fold kernels want dense or
+        QPlane); a QPlane ``state_delta`` stays compressed for the fold
+        (fused dequant pass) — ``_fold_async_slot`` decodes it separately
+        where the scatter needs dense rows."""
+        if self.compression is None:
+            return entry
+        if isinstance(entry.delta, TopKPlane):
+            entry = entry._replace(
+                delta=decompress_plane(entry.delta, spec.size)
+            )
+        return entry
+
     def _flat_round_step(self, fstate: FedState, batches, ids, mask,
                          full_batches, spec: FlatSpec, n_clipped=None,
-                         cohort_rows=None, emit_rows=False):
+                         cohort_rows=None, emit_rows=False,
+                         residual_rows=None):
         """One round entirely on the flat plane: (P,) carry through the
         local-step scan, (C, P) cohort planes through aggregation, (N, P)
         client-state scatter.  Same math as ``_tree_round_step`` — the
@@ -1188,6 +1397,17 @@ class FederatedEngine:
         # terms keep every reduction bitwise the unsharded one's
         wp = self._pad_cohort(w, mode="zero") if self._sharded else w
         use_kernel = cfg.use_fused_kernel and algo.server_fn is None
+
+        # wire encoding between fault injection and fold — untraced when
+        # cfg.compression is None (see _compress_uplink); under sharding
+        # the encode runs OUTSIDE shard_map on the full padded planes
+        new_res_rows = None
+        if self.compression is not None:
+            res_rows = self._residual_rows_for(fstate, ids, residual_rows)
+            outs, new_res_rows = self._compress_uplink(
+                fstate.server.round, outs,
+                wp if cfg.use_fused_kernel else w, res_rows, spec,
+            )
 
         fsrv = fstate.server
         if use_kernel and self._sharded:
@@ -1263,7 +1483,15 @@ class FederatedEngine:
                     scatter, fstate.client_states, outs.state_delta
                 )
 
-        pay = self._payload_from_nbytes(spec.nbytes)
+        # the error-feedback residual is CLIENT-side state: it tracks what
+        # the client did not transmit, so it updates whenever the client
+        # transmitted — independent of the fold-time quorum decision
+        new_res = fstate.residuals
+        if new_res_rows is not None and new_res is not None and not emit_rows:
+            C = ids.shape[0]
+            new_res = new_res.at[ids].set(new_res_rows[:C])
+
+        pay = self._payload_from_nbytes(spec.nbytes, spec.size)
         metrics = RoundMetrics(
             loss=jnp.sum(losses * wp) / jnp.maximum(n_active, 1.0),
             n_active=n_active,
@@ -1279,9 +1507,12 @@ class FederatedEngine:
             n_retries=jnp.float32(0.0),
             quorum_skipped=1.0 - ok.astype(jnp.float32),
         )
-        new_state = FedState(new_params, new_server, new_cst, fstate.rng)
+        new_state = FedState(new_params, new_server, new_cst, fstate.rng,
+                             residuals=new_res)
         if emit_rows:
-            return new_state, metrics, rows_out
+            C = ids.shape[0]
+            res_out = None if new_res_rows is None else new_res_rows[:C]
+            return new_state, metrics, rows_out, res_out
         return new_state, metrics
 
     def _fused_round_close(self, algo, fsrv, outs, w, n_active, x_t, eta_l,
@@ -1656,7 +1887,7 @@ class FederatedEngine:
         # FedACG-style lookahead weight of a fold that is D−1 rounds stale —
         # STATIC (depth is static), so γ = 1 costs nothing on the sync path
         discount = float(cfg.staleness_discount) ** (D - 1)
-        pay = self._payload_from_nbytes(spec.nbytes)
+        pay = self._payload_from_nbytes(spec.nbytes, spec.size)
 
         def in_scan_eval(t, x_plane):
             if not eval_every or predict_fn is None:
@@ -1698,9 +1929,15 @@ class FederatedEngine:
                 mhist = jax.lax.dynamic_update_index_in_dim(
                     mhist, fst.server.momentum, sm, 0
                 )
-            entry, n_active, loss, n_dropped, n_quar = self._launch_async_cohort(
+            (entry, n_active, loss, n_dropped, n_quar,
+             res_rows) = self._launch_async_cohort(
                 fst, m_used, batches, ids, mask, full, spec
             )
+            if res_rows is not None:  # top-k residuals update at launch
+                C = ids.shape[0]
+                fst = fst._replace(
+                    residuals=fst.residuals.at[ids].set(res_rows[:C])
+                )
             if fold:
                 oldest, pending = ring_push(pending, entry)
                 fst, mean_norm, q_skip = self._fold_async_slot(
@@ -1779,7 +2016,8 @@ class FederatedEngine:
         return self._unravel_state(fstate, spec)
 
     def _launch_async_cohort(self, fstate: FedState, m_used, batches, ids,
-                             mask, full, spec: FlatSpec, cohort_rows=None):
+                             mask, full, spec: FlatSpec, cohort_rows=None,
+                             residual_rows=None):
         """Client phase of one pipelined iteration: run the cohort against
         (current params, stale momentum) and pack its uplink as a ring
         entry.  Kernel path: outputs already ARE ``(C, P)`` planes and ride
@@ -1824,6 +2062,19 @@ class FederatedEngine:
         n_active = jnp.sum(w)
         wp = self._pad_cohort(w, mode="zero") if self._sharded else w
 
+        # wire encoding happens AT LAUNCH, like the faults above: the ring
+        # carries the compressed representation (the in-flight memory win)
+        # and the error-feedback residual updates when the client
+        # transmits, not D−1 rounds later at the fold
+        new_res_rows = None
+        if self.compression is not None:
+            res_rows = self._residual_rows_for(fstate, ids, residual_rows)
+            outs, new_res_rows = self._compress_uplink(
+                fstate.server.round, outs,
+                wp if cfg.use_fused_kernel else w, res_rows, spec,
+                ring=True,
+            )
+
         if cfg.use_fused_kernel:
             delta_e, extra_e = outs.delta, outs.extra
         else:
@@ -1843,7 +2094,7 @@ class FederatedEngine:
             eta_l=eta_l,
         )
         loss = jnp.sum(losses * wp) / jnp.maximum(n_active, 1.0)
-        return entry, n_active, loss, n_dropped, n_quar
+        return entry, n_active, loss, n_dropped, n_quar, new_res_rows
 
     def _fold_async_slot(self, fstate: FedState, entry: CohortUplink,
                          spec: FlatSpec, discount, fold_rows=None,
@@ -1869,6 +2120,9 @@ class FederatedEngine:
         the surviving weight row is only final once the faulted entry
         leaves the ring."""
         cfg, algo = self.cfg, self.algo
+        # sparse top-k deltas densify here, at fold time; QPlane planes
+        # stay compressed into the fused dequant fold below
+        entry = self._decode_ring_entry(entry, spec)
         w = entry.w  # (C_pad,) under cohort sharding — pad rows weigh 0
         n_active = jnp.sum(w)
         x_t = fstate.params
@@ -1936,16 +2190,21 @@ class FederatedEngine:
         skipped = 1.0 - ok.astype(jnp.float32)
 
         # scatter the folded cohort's client-state updates (stale entries
-        # of non-participants untouched)
+        # of non-participants untouched).  A ring-compressed state plane
+        # decodes HERE — the scatter adopts exactly the dequantized rows
+        # the fold consumed
+        sd_e = entry.state_delta
+        if isinstance(sd_e, QPlane):
+            sd_e = decompress_plane(sd_e)
         new_cst = fstate.client_states
         rows_out = None
         if algo.needs_client_state:
             if emit_rows:
                 if cfg.use_fused_kernel:
-                    rows_out = fold_rows + entry.state_delta * w[:, None]
+                    rows_out = fold_rows + sd_e * w[:, None]
                 else:
                     gathered = spec.unravel(fold_rows)
-                    sd_tree = spec.unravel(entry.state_delta, dtype=jnp.float32)
+                    sd_tree = spec.unravel(sd_e, dtype=jnp.float32)
                     upd = jax.tree_util.tree_map(
                         lambda a, d: a + d * w.reshape(
                             (-1,) + (1,) * (d.ndim - 1)
@@ -1960,13 +2219,13 @@ class FederatedEngine:
                 C = cohort_capacity(cfg)
                 ids_r, w_r = entry.ids[:C], w[:C]
                 upd = (fstate.client_states[ids_r]
-                       + entry.state_delta[:C] * w_r[:, None])
+                       + sd_e[:C] * w_r[:, None])
                 new_cst = fstate.client_states.at[ids_r].set(upd)
             elif cfg.use_fused_kernel:  # (N, P) plane: ONE gather + scatter
-                upd = fstate.client_states[entry.ids] + entry.state_delta * w[:, None]
+                upd = fstate.client_states[entry.ids] + sd_e * w[:, None]
                 new_cst = fstate.client_states.at[entry.ids].set(upd)
             else:
-                sd_tree = spec.unravel(entry.state_delta, dtype=jnp.float32)
+                sd_tree = spec.unravel(sd_e, dtype=jnp.float32)
 
                 def scatter(a, d):
                     upd = a[entry.ids] + d * w.reshape(
@@ -1978,7 +2237,8 @@ class FederatedEngine:
                     scatter, fstate.client_states, sd_tree
                 )
 
-        new_state = FedState(new_params, new_server, new_cst, fstate.rng)
+        new_state = FedState(new_params, new_server, new_cst, fstate.rng,
+                             residuals=fstate.residuals)
         if emit_rows:
             return new_state, _flat_norm(mean_delta), skipped, rows_out
         return new_state, _flat_norm(mean_delta), skipped
@@ -2010,20 +2270,22 @@ class FederatedEngine:
             seed = jax.random.randint(k_batch, (), 0, jnp.int32(2**31 - 1))
             return rng, ids, mask, n_clipped, seed
 
-        def step(fst, batches, ids, mask, full, n_clipped, rows):
-            if rows is None:  # stateless spec: nothing to gather/emit
+        def step(fst, batches, ids, mask, full, n_clipped, rows, res_rows):
+            if rows is None and res_rows is None:
+                # stateless, uncompressed-or-residual-free: nothing to emit
                 fst, m = self._flat_round_step(
                     fst, batches, ids, mask, full, spec, n_clipped
                 )
-                return fst, m, None
+                return fst, m, None, None
             return self._flat_round_step(
                 fst, batches, ids, mask, full, spec, n_clipped,
-                cohort_rows=rows, emit_rows=True,
+                cohort_rows=rows, emit_rows=True, residual_rows=res_rows,
             )
 
-        def launch(fst, m_used, batches, ids, mask, full, rows):
+        def launch(fst, m_used, batches, ids, mask, full, rows, res_rows):
             return self._launch_async_cohort(
-                fst, m_used, batches, ids, mask, full, spec, cohort_rows=rows
+                fst, m_used, batches, ids, mask, full, spec,
+                cohort_rows=rows, residual_rows=res_rows,
             )
 
         def fold(fst, entry, fold_rows, discount):
@@ -2081,6 +2343,18 @@ class FederatedEngine:
             )
         return self.population
 
+    def _residual_store(self):
+        """The host-side residual row store (top-k under ``"host"``), or
+        ``None`` when residuals are resident / compression carries none."""
+        if not self._ef_residuals or self.population_store == "resident":
+            return None
+        if self.residual_population is None:
+            raise RuntimeError(
+                "residual store missing — call eng.init(params, rng) "
+                "before store-backed rounds with topk compression"
+            )
+        return self.residual_population
+
     def run_rounds_store(self, state: FedState, data, n_rounds: int):
         """Sync engine for ``population_store="host"``: a host loop of the
         jitted round step with a store gather before and scatter after each
@@ -2090,7 +2364,18 @@ class FederatedEngine:
 
         ``data`` may be a device-resident ``FederatedData`` (the bitwise-
         oracle pairing used by tests) or a ``StreamingClientData`` whose
-        shards generate on demand (the N=1e6 path)."""
+        shards generate on demand (the N=1e6 path).
+
+        ``cfg.store_prefetch`` (default on) double-buffers the host side:
+        round t+1's cohort sampling, minibatch generation, and optimistic
+        store gather run on a background thread while round t's device
+        step executes; rows round t scattered after the optimistic gather
+        are re-gathered at consumption (the cohort overlap is tiny at
+        fleet scale).  The device work, its inputs, and the rng chain are
+        IDENTICAL to the synchronous loop — the prefetch-on/off bitwise
+        test pins the contract (only ``n_retries`` may differ under
+        injected store chaos: the patch gathers shift the failure
+        stream)."""
         cfg = self.cfg
         if n_rounds < 1:
             raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
@@ -2100,30 +2385,145 @@ class FederatedEngine:
         device_data = hasattr(data, "client_x")
         stateful = self.algo.needs_client_state
         store = self._require_store() if stateful else None
+        res_store = self._residual_store()
+        if getattr(cfg, "store_prefetch", True) and n_rounds > 1:
+            fstate, metrics = self._store_loop_prefetch(
+                fstate, jits, data, device_data, store, res_store, n_rounds
+            )
+        else:
+            fstate, metrics = self._store_loop_sync(
+                fstate, jits, data, device_data, store, res_store, n_rounds
+            )
+        state = self._unravel_state(fstate, spec)
+        return state, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *metrics)
+
+    def _store_loop_sync(self, fstate, jits, data, device_data, store,
+                         res_store, n_rounds):
+        """The synchronous host loop — sample, gather, step, scatter, one
+        round at a time.  The bitwise oracle for the prefetched loop."""
         metrics = []
         for _ in range(n_rounds):
             fstate, batches, ids, mask, full, n_clipped = self._host_sample(
                 jits, fstate, data, device_data
             )
-            rows = None
+            ids_np = np.asarray(ids)
+            rows = res_rows = None
             retries = 0
-            if stateful:
-                got, r_g = self._store_io(store.gather, np.asarray(ids))
+            if store is not None:
+                got, r_g = self._store_io(store.gather, ids_np)
                 rows = jnp.asarray(got)
                 retries += r_g
-            fstate, m, new_rows = jits["step"](
-                fstate, batches, ids, mask, full, n_clipped, rows
+            if res_store is not None:
+                got, r_g = self._store_io(res_store.gather, ids_np)
+                res_rows = jnp.asarray(got)
+                retries += r_g
+            fstate, m, new_rows, new_res = jits["step"](
+                fstate, batches, ids, mask, full, n_clipped, rows, res_rows
             )
-            if stateful:
+            if store is not None:
                 _, r_s = self._store_io(
-                    store.scatter, np.asarray(ids), np.asarray(new_rows)
+                    store.scatter, ids_np, np.asarray(new_rows)
+                )
+                retries += r_s
+            if res_store is not None:
+                _, r_s = self._store_io(
+                    res_store.scatter, ids_np, np.asarray(new_res)
                 )
                 retries += r_s
             if retries:  # stamp host-side; device path stamped 0
                 m = m._replace(n_retries=jnp.float32(retries))
             metrics.append(m)
-        state = self._unravel_state(fstate, spec)
-        return state, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *metrics)
+        return fstate, metrics
+
+    def _store_loop_prefetch(self, fstate, jits, data, device_data, store,
+                             res_store, n_rounds):
+        """Double-buffered host loop: a one-worker executor runs round
+        t+1's ``_host_sample`` + optimistic store gather while round t's
+        jitted step runs on device.  Safe by construction:
+
+        * the sampler reads ONLY (rng, round counter) — both known before
+          the step (the step never advances rng, and the counter advances
+          by exactly 1) — so the prefetched cohort/batches are bitwise the
+          synchronous loop's;
+        * store ops serialize on a lock (gathers never observe a torn
+          scatter), and rows the current round scatters after the
+          optimistic gather are re-gathered at consumption
+          (``intersect1d`` of consecutive cohorts) — every step consumes
+          exactly the post-scatter rows the synchronous loop would."""
+        lock = threading.Lock()
+
+        def sample_and_gather(probe):
+            nf, batches, ids, mask, full, n_clipped = self._host_sample(
+                jits, probe, data, device_data
+            )
+            ids_np = np.asarray(ids)
+            rows = res_rows = None
+            retries = 0
+            with lock:
+                if store is not None:
+                    got, r = self._store_io(store.gather, ids_np)
+                    rows, retries = got, retries + r
+                if res_store is not None:
+                    got, r = self._store_io(res_store.gather, ids_np)
+                    res_rows, retries = got, retries + r
+            return (nf.rng, batches, ids, ids_np, mask, full, n_clipped,
+                    rows, res_rows, retries)
+
+        metrics = []
+        ex = ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="store-prefetch")
+        try:
+            pending = ex.submit(sample_and_gather, fstate)
+            prev_ids = None  # cohort scattered since the pending gather began
+            for t in range(n_rounds):
+                (rng, batches, ids, ids_np, mask, full, n_clipped, rows,
+                 res_rows, retries) = pending.result()
+                fstate = fstate._replace(rng=rng)
+                if prev_ids is not None:
+                    # patch rows the previous round's scatter invalidated
+                    overlap = np.intersect1d(ids_np, prev_ids)
+                    if overlap.size:
+                        pos = {int(c): i for i, c in enumerate(ids_np)}
+                        sel = np.array([pos[int(c)] for c in overlap])
+                        with lock:
+                            if store is not None:
+                                got, r = self._store_io(store.gather, overlap)
+                                rows[sel], retries = got, retries + r
+                            if res_store is not None:
+                                got, r = self._store_io(
+                                    res_store.gather, overlap
+                                )
+                                res_rows[sel], retries = got, retries + r
+                # round t+1's host work overlaps the device step below
+                if t + 1 < n_rounds:
+                    probe = fstate._replace(server=fstate.server._replace(
+                        round=fstate.server.round + 1
+                    ))
+                    pending = ex.submit(sample_and_gather, probe)
+                fstate, m, new_rows, new_res = jits["step"](
+                    fstate, batches, ids, mask, full, n_clipped,
+                    None if rows is None else jnp.asarray(rows),
+                    None if res_rows is None else jnp.asarray(res_rows),
+                )
+                with lock:
+                    if store is not None:
+                        _, r = self._store_io(
+                            store.scatter, ids_np, np.asarray(new_rows)
+                        )
+                        retries += r
+                    if res_store is not None:
+                        _, r = self._store_io(
+                            res_store.scatter, ids_np, np.asarray(new_res)
+                        )
+                        retries += r
+                prev_ids = (ids_np if (store is not None
+                                       or res_store is not None) else None)
+                if retries:
+                    m = m._replace(n_retries=jnp.float32(retries))
+                metrics.append(m)
+        finally:
+            ex.shutdown(wait=True)
+        return fstate, metrics
 
     def _host_fold(self, jits, fstate: FedState, entry: CohortUplink,
                    discount: float, store, stateful: bool):
@@ -2179,7 +2579,8 @@ class FederatedEngine:
         if S > 0 and algo.needs_momentum_broadcast:
             mhist = [fstate.server.momentum for _ in range(S)]
         discount = float(cfg.staleness_discount) ** (D - 1)
-        pay = self._payload_from_nbytes(spec.nbytes)
+        pay = self._payload_from_nbytes(spec.nbytes, spec.size)
+        res_store = self._residual_store()
         ring = []
         metrics = []
         for t in range(n_rounds):
@@ -2193,15 +2594,24 @@ class FederatedEngine:
                 sm = t % S
                 m_used = mhist[sm]
                 mhist[sm] = fstate.server.momentum
-            rows = None
+            rows = res_rows = None
             retries = 0
             if stateful:
                 got, r_g = self._store_io(store.gather, np.asarray(ids))
                 rows = jnp.asarray(got)
                 retries += r_g
-            entry, n_active, loss, n_dropped, n_quar = jits["launch"](
-                fstate, m_used, batches, ids, mask, full, rows
+            if res_store is not None:
+                got, r_g = self._store_io(res_store.gather, np.asarray(ids))
+                res_rows = jnp.asarray(got)
+                retries += r_g
+            entry, n_active, loss, n_dropped, n_quar, new_res = jits["launch"](
+                fstate, m_used, batches, ids, mask, full, rows, res_rows
             )
+            if res_store is not None:  # residuals update at launch
+                _, r_s = self._store_io(
+                    res_store.scatter, np.asarray(ids), np.asarray(new_res)
+                )
+                retries += r_s
             ring.append(entry)
             fold_now = len(ring) >= D
             if fold_now:

@@ -181,6 +181,18 @@ class AlgorithmSpec(NamedTuple):
     # stored-momentum dtype policy: "float32", or "momentum_dtype" to honor
     # cfg.momentum_dtype (FedCM's broadcastable Δ_t)
     momentum_store: str = "float32"
+    # --- (d) uplink compression (repro.core.compress) ---
+    # spec-declared default uplink compression kind ("int8"/"bf16"/"topk",
+    # None = uncompressed).  cfg.compression overrides it; the engine
+    # resolves ``effective = cfg.compression or spec default``.
+    uplink_compression: Optional[str] = None
+    # top-k sparsification carries error-feedback residuals as a NEW
+    # per-client state stream (resident (N, P) plane / host-store rows,
+    # checkpointed with the run).  A spec that declares lossy
+    # sparsification must also declare the residual stream — validation
+    # refuses "topk" without it (sparsifying with no residual silently
+    # biases every uplink; see core/compress.py).
+    needs_residual: bool = False
 
     # ------------------------------------------------------------------
     # derived uplink / ring layout (cohort-parallel engine consumes these)
@@ -359,6 +371,22 @@ def _validate(spec: AlgorithmSpec) -> None:
         )
     if spec.client_state_uplink and not spec.needs_client_state:
         raise ValueError(f"{spec.name}: client_state_uplink without client state")
+    if spec.uplink_compression not in (None, "int8", "bf16", "topk"):
+        raise ValueError(
+            f"{spec.name}: unknown uplink_compression "
+            f"{spec.uplink_compression!r}; known: int8 | bf16 | topk"
+        )
+    if spec.uplink_compression == "topk" and not spec.needs_residual:
+        raise ValueError(
+            f"{spec.name}: uplink_compression='topk' without needs_residual "
+            f"— lossy sparsification needs the error-feedback residual "
+            f"stream or every uplink is silently biased (repro.core.compress)"
+        )
+    if spec.needs_residual and spec.uplink_compression != "topk":
+        raise ValueError(
+            f"{spec.name}: needs_residual declared but uplink_compression is "
+            f"{spec.uplink_compression!r} — only 'topk' carries residuals"
+        )
     if spec.server_fn is not None:
         if spec.server_post_fn is not None:
             raise ValueError(f"{spec.name}: server_fn replaces fold+post — drop server_post_fn")
@@ -502,6 +530,9 @@ def describe_algorithm(spec: AlgorithmSpec) -> Dict[str, str]:
         ) if on
     ] or ["—"]
     wire = spec.wire_uplink_planes
+    comp = spec.uplink_compression or "f32"
+    if spec.needs_residual:
+        comp += " + residual"
     return {
         "algorithm": spec.name,
         "local step": direction,
@@ -509,6 +540,8 @@ def describe_algorithm(spec: AlgorithmSpec) -> Dict[str, str]:
         "state planes": ", ".join(planes),
         # §4.2 payload accounting: planes that cross the client→server wire
         "uplink": f"{len(wire)}×P ({'+'.join(wire)})",
+        # spec-declared default wire format (cfg.compression overrides)
+        "wire": comp,
     }
 
 
@@ -517,7 +550,8 @@ def routing_table_md() -> str:
     registry (tests/test_registry.py asserts kernels/README.md embeds this
     verbatim — regenerate with ``python -m repro.core.registry --write``)."""
     rows = [describe_algorithm(get_algorithm(n)) for n in list_algorithms()]
-    cols = ["algorithm", "local step", "server fold", "state planes", "uplink"]
+    cols = ["algorithm", "local step", "server fold", "state planes",
+            "uplink", "wire"]
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     fmt = lambda r: "| " + " | ".join(r[c].ljust(widths[c]) for c in cols) + " |"
     head = fmt({c: c for c in cols})

@@ -45,6 +45,12 @@ def check(path: str, *, min_rounds: int = 1, min_swaps: int = 0,
     if any(r.get("rounds_per_s") is None or r["rounds_per_s"] <= 0
            for r in rnds):
         fails.append("round row missing a positive rounds_per_s")
+    # wire accounting: every round must report what it actually shipped
+    # per client — None or 0 means the engine's payload accounting broke
+    # (a compression regression would also show up here as f32-sized rows)
+    if any(r.get("uplink_bytes") is None or r["uplink_bytes"] <= 0
+           for r in rnds):
+        fails.append("round row missing positive uplink_bytes")
     pubs = [e["version"] for e in events(rows, "publish")]
     if any(b <= a for a, b in zip(pubs, pubs[1:])):
         fails.append(f"published versions not strictly monotone: {pubs}")

@@ -208,6 +208,8 @@ class FleetDriver:
                 eval_acc=(round(float(eval_acc), 6)
                           if (last and eval_acc is not None) else None),
                 published_version=published_version if last else None,
+                uplink_bytes=(float(host["bytes_up"][i])
+                              if "bytes_up" in host else None),
                 **counters,
             )
         self.status.bump_counters({
@@ -219,6 +221,8 @@ class FleetDriver:
             cohort=int(host["n_active"][-1]),
             eval_acc=(float(eval_acc) if eval_acc is not None
                       else self.status.eval_acc),
+            uplink_bytes=(float(host["bytes_up"][-1])
+                          if "bytes_up" in host else None),
         )
         return host
 

@@ -50,6 +50,10 @@ class FleetStatus:
         self.swaps = 0
         self.serve_steps = 0
         self.eval_acc: Optional[float] = None
+        #: last round's total uplink bytes (cohort × per-client wire
+        #: bytes) AFTER wire compression — what a fleet operator alerts
+        #: on when a compression config regresses (silently shipping f32)
+        self.uplink_bytes: Optional[float] = None
 
     def update(self, **kw: Any) -> None:
         with self._lock:
@@ -87,6 +91,7 @@ class FleetStatus:
                 "rounds_per_s": self.rounds_per_s,
                 "cohort": self.cohort,
                 "eval_acc": self.eval_acc,
+                "uplink_bytes": self.uplink_bytes,
                 "counters": dict(self.counters),
                 "published_version": self.published_version,
                 "served_version": self.served_version,
@@ -114,6 +119,8 @@ def _prometheus(snap: Dict[str, Any]) -> str:
          "round throughput of the most recent fused chunk")
     emit("cohort_size", snap["cohort"], "active cohort of the last round")
     emit("eval_accuracy", snap["eval_acc"], "last cadence eval accuracy")
+    emit("uplink_bytes", snap["uplink_bytes"],
+         "total uplink payload bytes of the last round, after wire compression")
     for k, v in snap["counters"].items():
         emit(f"{k}_total", v, f"cumulative RoundMetrics.{k} over the run")
     emit("published_model_version", snap["published_version"],

@@ -49,10 +49,14 @@ FAULT_COUNTERS: Tuple[str, ...] = (
 
 #: full per-round row schema (event == "round").  ``eval_acc`` is null on
 #: off-cadence rounds; ``published_version`` is null on rounds without a
-#: checkpoint publication.
+#: checkpoint publication.  ``uplink_bytes`` is the round's TOTAL uplink
+#: payload in bytes (active clients × per-client wire bytes) AFTER wire
+#: compression (repro.core.compress) — the operator-visible record that a
+#: compression config actually shrank the wire.  Additive: rows stay
+#: schema-1 (existing readers key by name).
 ROUND_FIELDS: Tuple[str, ...] = (
     "event", "round", "t_unix", "rounds_per_s", "cohort", "loss",
-    "eval_acc", "published_version",
+    "eval_acc", "published_version", "uplink_bytes",
 ) + FAULT_COUNTERS
 
 

@@ -156,3 +156,124 @@ def server_update_flat(deltas, wn, x, m, coefs, *, m_dtype=None,
     new_x = outs.pop(0) if write_x else None
     new_m = outs.pop(0) if write_m else None
     return new_x, new_m, outs[0]
+
+
+def _make_dequant_kernel(write_x: bool, write_m: bool):
+    """The compressed-uplink fold: dequantize → masked-weighted accumulate
+    → EMA/param step, fused in ONE pass over the compressed plane.
+
+        d_c   = scale_c · q_c              (per-row dequant, in VMEM)
+        mean  = Σ_c wn_c · d_c
+        m'    = c_mm·m + c_md·(γ·mean)
+        x'    = x + c_xd·(γ·mean)
+
+    The f32 ``(C, P)`` cohort plane NEVER exists in HBM — the kernel
+    streams the int8/bf16 blocks and dequantizes in registers, so the
+    fold's plane traffic shrinks 4x (int8) / 2x (bf16) with it.  ``q``
+    may be int8 (stochastic-rounded, scale = absmax/127) or bf16
+    (scale ≡ 1.0, exact under f32).  Same grid/output structure as
+    ``_make_kernel`` — the uncompressed kernel stays byte-identical, and
+    the ≥2-step grid floor that makes sharded column launches bitwise
+    applies unchanged."""
+
+    def kernel(coef_ref, wn_ref, sc_ref, q_ref, *refs):
+        c_mm = coef_ref[0, 0]
+        c_md = coef_ref[0, 1]
+        c_xd = coef_ref[0, 2]
+        gamma = coef_ref[0, 3]  # staleness discount on the folded mean
+        wn = wn_ref[...][:, 0].astype(jnp.float32)  # (C,) mask/|S| weights
+        sc = sc_ref[...][:, 0].astype(jnp.float32)  # (C,) dequant scales
+        # dequantize in-register: (C, rows, LANE) f32 exists only in VMEM
+        d = q_ref[...].astype(jnp.float32) * sc[:, None, None]
+        mean = jnp.sum(d * wn[:, None, None], axis=0)  # (rows, LANE)
+        dmean = gamma * mean
+        refs = list(refs)
+        x_ref = refs.pop(0) if write_x else None
+        m_ref = refs.pop(0) if write_m else None
+        if write_x:
+            newx_ref = refs.pop(0)
+        if write_m:
+            newm_ref = refs.pop(0)
+        mean_ref = refs.pop(0)
+        if write_x:
+            x = x_ref[...].astype(jnp.float32)
+            newx_ref[...] = (x + c_xd * dmean).astype(newx_ref.dtype)
+        if write_m:
+            m = m_ref[...].astype(jnp.float32)
+            newm_ref[...] = (c_mm * m + c_md * dmean).astype(newm_ref.dtype)
+        mean_ref[...] = mean
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("m_dtype", "block_elems", "interpret",
+                                   "write_x", "write_m"))
+def dequant_update_flat(q, scale, wn, x, m, coefs, *, m_dtype=None,
+                        block_elems: int = DEFAULT_BLOCK,
+                        interpret: bool = True,
+                        write_x: bool = True, write_m: bool = True):
+    """Fused dequantize-fold launch: ``q`` (C, P) int8 or bf16, ``scale``
+    (C,) or (C, 1) per-row f32 dequant scales, the rest exactly
+    ``server_update_flat``'s contract (wn premultiplied mask/|S|, coefs =
+    (c_mm, c_md, c_xd, γ)).  Returns (new_x, new_m, mean) with the mean
+    of the DEQUANTIZED plane, f32, undiscounted.
+
+    Layout matches the uncompressed launch: the compressed plane blocks
+    as (C, rows, LANE) with the whole cohort column resident per grid
+    step, and ``scale`` rides lane-padded (C, LANE) next to ``wn``
+    instead of an unaligned (C, 1) operand.  (On real TPUs int8 tiles
+    want (32, 128) minimum — the ``rows``-sized second axis satisfies it
+    for every block_elems ≥ 32·LANE; interpret mode is layout-agnostic.)
+    """
+    C, n = q.shape
+    m_dt = jnp.dtype(m_dtype) if m_dtype is not None else m.dtype
+    rows = block_elems // LANE
+    # same ≥2-step grid floor as server_update_flat (bitwise rationale
+    # in that docstring: a collapsed 1-step grid re-fuses per-program)
+    nblocks = max(2, pl.cdiv(n, block_elems))
+    padded = nblocks * block_elems
+    pad = padded - n
+
+    def prep(a):
+        a = jnp.pad(a, (0, pad))
+        return a.reshape(padded // LANE, LANE)
+
+    qr = jnp.pad(q, ((0, 0), (0, pad))).reshape(C, padded // LANE, LANE)
+    wn_l = jnp.zeros((C, LANE), jnp.float32).at[:, 0].set(wn.astype(jnp.float32))
+    sc_l = jnp.zeros((C, LANE), jnp.float32).at[:, 0].set(
+        scale.astype(jnp.float32).reshape(C)
+    )
+
+    vec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    plane = pl.BlockSpec((C, rows, LANE), lambda i: (0, i, 0))
+    smem = pl.BlockSpec((1, 4), lambda i: (0, 0))
+    wspec = pl.BlockSpec((C, LANE), lambda i: (0, 0))
+    operands = [coefs.astype(jnp.float32).reshape(1, 4), wn_l, sc_l, qr]
+    in_specs = [smem, wspec, wspec, plane]
+    out_specs, out_shape = [], []
+    if write_x:
+        xr = prep(x)
+        operands.append(xr)
+        in_specs.append(vec)
+        out_specs.append(vec)
+        out_shape.append(jax.ShapeDtypeStruct(xr.shape, x.dtype))
+    if write_m:
+        mr = prep(m)
+        operands.append(mr)
+        in_specs.append(vec)
+        out_specs.append(vec)
+        out_shape.append(jax.ShapeDtypeStruct(mr.shape, m_dt))
+    out_specs.append(vec)
+    out_shape.append(jax.ShapeDtypeStruct((padded // LANE, LANE), jnp.float32))
+    outs = pl.pallas_call(
+        _make_dequant_kernel(write_x, write_m),
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    outs = [o.reshape(padded)[:n] for o in outs]
+    new_x = outs.pop(0) if write_x else None
+    new_m = outs.pop(0) if write_m else None
+    return new_x, new_m, outs[0]

@@ -29,7 +29,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.server_update.kernel import DEFAULT_BLOCK, LANE, server_update_flat
+from repro.kernels.server_update.kernel import (
+    DEFAULT_BLOCK, LANE, dequant_update_flat, server_update_flat,
+)
 
 # CPU container: interpret mode (executes the kernel body in python).
 # On a real TPU runtime set INTERPRET=False.
@@ -78,6 +80,26 @@ def fused_server_step(deltas, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
     )
 
 
+def dequant_server_step(q, scale, wn, x, m, c_mm, c_md, c_xd, m_dtype=None,
+                        discount=1.0, write_x=True, write_m=True):
+    """``fused_server_step`` over a COMPRESSED plane: dequantize (int8/bf16
+    ``q`` × per-row ``scale``) → masked mean → EMA/step, one fused pass —
+    the f32 ``(C, P)`` plane never materializes outside VMEM.  Contract
+    otherwise identical to ``fused_server_step`` (same ``_auto_block``
+    ≥2-step grid, so sharded column launches stay bitwise vs unsharded)."""
+    coefs = jnp.stack([
+        jnp.asarray(c_mm, jnp.float32),
+        jnp.asarray(c_md, jnp.float32),
+        jnp.asarray(c_xd, jnp.float32),
+        jnp.asarray(discount, jnp.float32),
+    ])
+    return dequant_update_flat(
+        q, scale, wn, x, m, coefs, m_dtype=m_dtype, interpret=INTERPRET,
+        block_elems=_auto_block(q.shape[-1]),
+        write_x=write_x, write_m=write_m,
+    )
+
+
 def fused_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0):
     """Execute an ``AlgorithmSpec``'s fold rows as fused kernel passes.
 
@@ -100,6 +122,7 @@ def fused_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0):
     """
     # deferred import: repro.core.engine imports this module at package
     # init, so a module-level registry import would be circular
+    from repro.core.compress import QPlane
     from repro.core.registry import _fold_coef, _is_static_one, _is_static_zero
 
     agg_dt = jnp.dtype(getattr(cfg, "aggregate_dtype", "float32"))
@@ -116,11 +139,23 @@ def fused_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0):
         c_xd = _fold_coef(p.c_xd, cfg, eta_l, n_active)
         adopt_x = not _is_static_zero(p.c_xd)
         adopt_m = not (_is_static_zero(p.c_md) and _is_static_one(p.c_mm))
-        new_x, new_m, mean = fused_server_step(
-            q(planes[p.plane]), wn, x, m, c_mm, c_md, c_xd,
-            m_dtype=m_dt, discount=discount,
-            write_x=adopt_x, write_m=adopt_m,
-        )
+        pv = planes[p.plane]
+        if isinstance(pv, QPlane):
+            # compressed uplink (repro.core.compress): the fused dequant
+            # fold consumes the int8/bf16 representation directly — the
+            # f32 (C, P) plane never materializes (aggregate_dtype
+            # quantization does not compose; the rep IS the quantization)
+            new_x, new_m, mean = dequant_server_step(
+                pv.q, pv.scale, wn, x, m, c_mm, c_md, c_xd,
+                m_dtype=m_dt, discount=discount,
+                write_x=adopt_x, write_m=adopt_m,
+            )
+        else:
+            new_x, new_m, mean = fused_server_step(
+                q(pv), wn, x, m, c_mm, c_md, c_xd,
+                m_dtype=m_dt, discount=discount,
+                write_x=adopt_x, write_m=adopt_m,
+            )
         if p.plane == "delta":
             mean_delta = mean
         if adopt_x:
@@ -156,10 +191,23 @@ def scatter_fold(spec, cfg, planes, wn, n_active, x, m, eta_l, discount=1.0,
     ``plane_chunk`` / ``gather_plane``) — shared with the scattered-mean
     path so the bitwise-load-bearing layout has one definition.
     """
+    from repro.core.compress import QPlane
     from repro.core.flat import cohort_to_columns, gather_plane, plane_chunk
 
+    def to_cols(v):
+        if isinstance(v, QPlane):
+            # the all_to_all moves the COMPRESSED payload (int8/bf16) —
+            # the cross-device wire win of this whole PR; the per-row f32
+            # scales (C/n_shards, 1) all_gather to the full (C, 1) row
+            # every column shard's dequant needs (C·4 bytes, negligible)
+            return QPlane(
+                q=cohort_to_columns(v.q, axis_name, n_shards),
+                scale=jax.lax.all_gather(v.scale, axis_name, tiled=True),
+            )
+        return cohort_to_columns(v, axis_name, n_shards)
+
     Pn = x.shape[-1]
-    cols = {k: cohort_to_columns(v, axis_name, n_shards)
+    cols = {k: to_cols(v)
             for k, v in planes.items() if k in spec.fold_planes}
     new_x, new_m, mean = fused_fold(
         spec, cfg, cols, wn, n_active,

@@ -22,3 +22,12 @@ def server_update_ref(deltas, wn, x, m, coefs, m_dtype=None):
     new_m = coefs[0] * m.astype(jnp.float32) + coefs[1] * dmean
     new_x = (x.astype(jnp.float32) + coefs[2] * dmean).astype(x.dtype)
     return new_x, new_m.astype(m_dtype or m.dtype), mean
+
+
+def dequant_server_update_ref(q, scale, wn, x, m, coefs, m_dtype=None):
+    """Oracle for the fused dequant fold: dequantize the compressed
+    ``(C, P)`` plane (int8 or bf16 ``q`` × per-row f32 ``scale``) to f32,
+    then the standard masked-mean/EMA/step — the exact op order the
+    ``_make_dequant_kernel`` body uses."""
+    deltas = q.astype(jnp.float32) * scale.astype(jnp.float32).reshape(-1, 1)
+    return server_update_ref(deltas, wn, x, m, coefs, m_dtype)

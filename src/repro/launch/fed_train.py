@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, load_fed_run, save_fed_run
-from repro.configs.base import FaultConfig, FedConfig
+from repro.configs.base import CompressionConfig, FaultConfig, FedConfig
 from repro.core import (
     FederatedEngine,
     RoundMetrics,
@@ -187,7 +187,7 @@ def run_federated(
             step = latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"--resume: no checkpoints in {ckpt_dir!r}")
-            state, population, meta = load_fed_run(
+            state, population, residuals, meta = load_fed_run(
                 ckpt_dir, step, state, num_clients=cfg.num_clients
             )
             if population is not None and eng.population is not None:
@@ -196,6 +196,10 @@ def run_federated(
                 getattr(eng.population, "inner", eng.population)._rows = (
                     population._rows
                 )
+            if residuals is not None and eng.residual_population is not None:
+                getattr(
+                    eng.residual_population, "inner", eng.residual_population
+                )._rows = residuals._rows
             r = int(meta["step"])
         fleet = None
         if serve:
@@ -244,9 +248,11 @@ def run_federated(
             snapshot = ckpt_every > 0 and (r % ckpt_every == 0 or r >= cfg.rounds)
             if snapshot:
                 pop = eng.population
+                res = eng.residual_population
                 save_fed_run(
                     ckpt_dir, r, state,
                     population=getattr(pop, "inner", pop) if pop is not None else None,
+                    residuals=getattr(res, "inner", res) if res is not None else None,
                 )
                 if fleet is not None:
                     pub_version = fleet.publish(r, state.params)
@@ -295,13 +301,19 @@ def _fmt_bytes(n: float) -> str:
     return f"{n:.1f} GiB"
 
 
-def list_algos_text(dim: int = 32, hidden: int = 128, n_classes: int = 10) -> str:
+def list_algos_text(dim: int = 32, hidden: int = 128, n_classes: int = 10,
+                    compression: "CompressionConfig | None" = None) -> str:
     """One line per registered algorithm: state-plane requirements + kernel
     routing, rendered from the registry (the same ``describe_algorithm``
     rows the kernels/README.md table is generated from), plus the §4.2
-    wire cost: per-client uplink bytes/round = |wire_uplink_planes| × P × 4
+    wire cost: per-client uplink bytes/round over the spec's wire planes
     for this driver's default model (abstract shapes only — nothing is
-    materialized)."""
+    materialized).  ``compression`` (the resolved ``--uplink-compress``)
+    reprices the column through the SAME accounting the engine bills
+    (``repro.core.compress.uplink_bytes_per_client``), so the table shows
+    what the configured run would actually ship."""
+    from repro.core.compress import uplink_bytes_per_client
+
     model = mlp_classifier((dim, hidden, hidden, n_classes))
     shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     P = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
@@ -309,16 +321,18 @@ def list_algos_text(dim: int = 32, hidden: int = 128, n_classes: int = 10) -> st
     for n in list_algorithms():
         spec = get_algorithm(n)
         r = describe_algorithm(spec)
-        r["uplink bytes/round"] = (
-            f"{_fmt_bytes(len(spec.wire_uplink_planes) * P * 4)}/client"
+        up = uplink_bytes_per_client(
+            compression, spec.wire_uplink_planes, P, P * 4
         )
+        r["uplink bytes/round"] = f"{_fmt_bytes(up)}/client"
         rows.append(r)
     cols = ["algorithm", "local step", "server fold", "state planes",
             "uplink", "uplink bytes/round"]
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
     lines += ["  ".join(r[c].ljust(widths[c]) for c in cols) for r in rows]
-    lines.append(f"(P = {P:,} params: mlp {dim}-{hidden}-{hidden}-{n_classes}, f32 wire)")
+    wire = "f32 wire" if compression is None else f"{compression.kind} wire"
+    lines.append(f"(P = {P:,} params: mlp {dim}-{hidden}-{hidden}-{n_classes}, {wire})")
     return "\n".join(lines)
 
 
@@ -378,6 +392,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round straggler probability: sampled clients "
                          "drop out of the cohort mask with this rate")
+    ap.add_argument("--uplink-compress", default="none",
+                    choices=["none", "int8", "bf16", "topk"],
+                    help="wire-compress client uplinks (repro.core.compress): "
+                         "stochastic-rounded int8 (+per-row f32 scale), "
+                         "bf16, or top-k sparsification with error-feedback "
+                         "residuals; 'none' keeps the f32 wire bitwise")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="fraction of plane coordinates top-k keeps "
+                         "(only with --uplink-compress topk)")
     ap.add_argument("--cohort-shard", type=int, default=0,
                     help="shard the client axis over N devices (a "
                          "('clients',) mesh; each device runs C/N clients "
@@ -487,6 +510,15 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
             quarantine_norm_mult=args.quarantine_norm_mult,
             seed=args.fault_seed,
         )
+    # compression is config data exactly like faults: "none" keeps
+    # cfg.compression=None — the engine's wire-encode code then never
+    # traces, preserving the bitwise-vs-pre-PR contract
+    compression = None
+    if args.uplink_compress != "none":
+        compression = CompressionConfig(
+            kind=args.uplink_compress, topk_frac=args.topk_frac,
+            seed=args.seed,
+        )
     return FedConfig(
         algo=args.algo, num_clients=args.clients, cohort_size=args.cohort,
         local_steps=args.local_steps, alpha=args.alpha, eta_l=args.eta_l,
@@ -503,6 +535,7 @@ def resolve_config(args: argparse.Namespace) -> FedConfig:
         fault=fault,
         min_quorum=args.min_quorum,
         allow_empty_cohort=args.allow_empty_cohort,
+        compression=compression,
     )
 
 
@@ -533,6 +566,12 @@ def write_dryrun_artifact(cfg: FedConfig, args: argparse.Namespace) -> Path:
     assert cfg.dropout_rate == args.dropout_rate
     assert cfg.min_quorum == args.min_quorum
     assert cfg.allow_empty_cohort == args.allow_empty_cohort
+    if args.uplink_compress != "none":
+        assert cfg.compression is not None
+        assert cfg.compression.kind == args.uplink_compress
+        assert cfg.compression.topk_frac == args.topk_frac
+    else:
+        assert cfg.compression is None
     if (args.fault_drop_rate > 0.0 or args.fault_corrupt_rate > 0.0
             or args.fault_deadline > 0.0 or args.fault_store_failure_rate > 0.0
             or args.quarantine_norm_mult > 0.0):
@@ -602,7 +641,10 @@ def main(argv=None) -> int:
     ap = build_parser()
     args = ap.parse_args(argv)
     if args.list_algos:
-        print(list_algos_text())
+        comp = (None if args.uplink_compress == "none" else
+                CompressionConfig(kind=args.uplink_compress,
+                                  topk_frac=args.topk_frac, seed=args.seed))
+        print(list_algos_text(compression=comp))
         return 0
     use_async = args.async_pipeline or args.pipeline_depth > 1 or args.staleness > 0
     if args.per_round and use_async:

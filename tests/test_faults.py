@@ -291,7 +291,7 @@ def test_save_fed_run_roundtrip_resident(tmp_path):
     _, eng, data, model = _setup("fedcm")
     st, _ = eng.run_rounds(_fresh_state(eng, model), data, 2)
     save_fed_run(str(tmp_path), 2, st, meta={"note": "x"})
-    restored, pop, meta = load_fed_run(str(tmp_path), 2, st)
+    restored, pop, _res, meta = load_fed_run(str(tmp_path), 2, st)
     assert meta["step"] == 2 and meta["note"] == "x" and pop is None
     _assert_trees_equal(st, restored)
 
@@ -311,7 +311,7 @@ def test_kill_and_resume_is_bitwise_resident():
     with tempfile.TemporaryDirectory() as d:
         save_fed_run(d, 3, st_half)
         assert latest_step(d) == 3
-        st_resumed, pop, _ = load_fed_run(d, None, st_half)
+        st_resumed, pop, _res, _ = load_fed_run(d, None, st_half)
     st_resumed, _ = eng.run_rounds(st_resumed, data, 3)
     _assert_trees_equal(st_full, st_resumed)
 
@@ -330,8 +330,8 @@ def test_kill_and_resume_is_bitwise_host_store(tmp_path):
                  population=getattr(eng_b.population, "inner", eng_b.population))
     # a FRESH engine (the resumed process) restores state + store
     eng_c, _, st_c = _store_setup("scaffold", fault)
-    st_c, pop, meta = load_fed_run(str(tmp_path), None, st_c,
-                                   num_clients=eng_c.cfg.num_clients)
+    st_c, pop, _res, meta = load_fed_run(str(tmp_path), None, st_c,
+                                         num_clients=eng_c.cfg.num_clients)
     assert meta["step"] == 2 and pop is not None
     getattr(eng_c.population, "inner", eng_c.population)._rows = pop._rows
     st_c, _ = eng_c.run_rounds_store(st_c, data, 2)

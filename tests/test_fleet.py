@@ -379,6 +379,7 @@ class TestDriver:
         host = {
             "loss": np.asarray([0.5, 0.4]), "n_active": np.asarray([4, 5]),
             "n_dropped": np.asarray([1.0, 0.0]),
+            "bytes_up": np.asarray([848.0, 848.0]),
         }
         fleet.record_chunk(start_round=0, host=host, seconds=0.5,
                            eval_acc=0.75, published_version=3)
@@ -392,6 +393,7 @@ class TestDriver:
         rnds = round_rows(rows)
         assert [r["round"] for r in rnds] == [1, 2]
         assert rnds[0]["n_dropped"] == 1.0
+        assert all(r["uplink_bytes"] == 848.0 for r in rnds)
         assert rnds[1]["eval_acc"] == 0.75
         assert rnds[1]["published_version"] == 3
         assert [e["version"] for e in events(rows, "publish")] == [1, 2, 3]
@@ -408,8 +410,9 @@ class TestDriver:
             ts.round_row(round=1, rounds_per_s=1.0)
         fails = check(str(tmp_path / "t.jsonl"), min_rounds=3, min_swaps=2,
                       require_health=True)
-        assert len(fails) == 3
+        assert len(fails) == 4
         assert any("round rows" in f for f in fails)
+        assert any("uplink_bytes" in f for f in fails)
         assert any("serve_summary" in f for f in fails)
         assert any("health" in f for f in fails)
 
